@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + the run.py CSV contract.
+
+Every benchmark emits rows ``name,us_per_call,derived`` where ``derived``
+carries the figure-specific metric(s) as ``key=value|key=value``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw):
+    """Median wall time of fn(*args) in microseconds (host-blocking)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, **derived):
+    parts = "|".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{parts}", flush=True)

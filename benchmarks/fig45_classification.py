@@ -1,0 +1,66 @@
+"""Paper Figs. 4-5: k-nn classification in the KPCA embedding vs ell
+(usps, yale), comparing KPCA / shadow / uniform / Nystrom / WNyström.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    gaussian, fit_kpca, fit_subsampled_kpca, fit_nystrom,
+    fit_weighted_nystrom, fit_rskpca, shadow_rsde,
+)
+from repro.data import make_dataset, train_test_split, knn_classify, DATASETS
+from benchmarks.common import timeit, emit
+
+
+def run_dataset(name: str, n: int | None, ells, n_runs: int, rank: int):
+    x, y, sigma = make_dataset(name, seed=0, n=n)
+    k = DATASETS[name].knn_k
+    ker = gaussian(sigma)
+    for ell in ells:
+        rows = {}
+        for run in range(n_runs):
+            xtr, ytr, xte, yte = train_test_split(x, y, seed=run)
+            t_ref = timeit(lambda: fit_kpca(xtr, ker, rank), repeat=1, warmup=0)
+            ref = fit_kpca(xtr, ker, rank)
+            rsde = shadow_rsde(xtr, ker, ell)
+            m = max(rsde.m, rank + 1)
+            fits = {
+                "none": lambda: ref,
+                "shadow": lambda: fit_rskpca(shadow_rsde(xtr, ker, ell),
+                                             ker, rank),
+                "uniform": lambda: fit_subsampled_kpca(xtr, ker, rank, m,
+                                                       seed=run),
+                "nystrom": lambda: fit_nystrom(xtr, ker, rank, m, seed=run),
+                "wnystrom": lambda: fit_weighted_nystrom(xtr, ker, rank, m,
+                                                         seed=run),
+            }
+            for meth, f in fits.items():
+                t_train = t_ref if meth == "none" else timeit(f, repeat=1,
+                                                              warmup=0)
+                mdl = f()
+                tr_emb = mdl.transform(xtr)
+                te_emb = mdl.transform(xte)
+                acc = float((knn_classify(tr_emb, ytr, te_emb, k) == yte).mean())
+                rows.setdefault(meth, []).append(
+                    (acc, t_ref / t_train, rsde.retention))
+        for meth, vals in rows.items():
+            arr = np.array(vals, float).mean(axis=0)
+            emit(f"fig45_{name}_{meth}_l{ell:.1f}", 0.0,
+                 accuracy=round(float(arr[0]), 4),
+                 train_speedup=round(float(arr[1]), 2),
+                 retention=round(float(arr[2]), 3))
+
+
+def main(fast: bool = True):
+    ells = [3.0, 4.0, 5.0] if fast else \
+        [round(e, 1) for e in np.arange(3.0, 5.01, 0.2)]
+    n_runs = 2 if fast else 10
+    run_dataset("usps", 1500 if fast else None, ells, n_runs,
+                rank=15)
+    run_dataset("yale", 1200 if fast else None, ells, n_runs,
+                rank=10)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 6: percentage of data retained by the ShDE vs ell."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import gaussian, shadow_rsde
+from repro.data import make_dataset
+from benchmarks.common import timeit, emit
+
+
+def main(fast: bool = True):
+    caps = {"german": None, "pendigits": 1500 if fast else None,
+            "usps": 1200 if fast else None, "yale": 1200 if fast else None}
+    ells = [3.0, 3.5, 4.0, 4.5, 5.0] if fast else \
+        [round(e, 1) for e in np.arange(3.0, 5.01, 0.1)]
+    for name, n in caps.items():
+        x, _, sigma = make_dataset(name, seed=0, n=n)
+        ker = gaussian(sigma)
+        for ell in ells:
+            t = timeit(lambda: shadow_rsde(x, ker, ell), repeat=1, warmup=0)
+            r = shadow_rsde(x, ker, ell)
+            emit(f"fig6_{name}_l{ell:.1f}", t,
+                 retention=round(r.retention, 4), m=r.m, n=r.n)
+
+
+if __name__ == "__main__":
+    main()

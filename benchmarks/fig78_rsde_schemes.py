@@ -1,0 +1,47 @@
+"""Paper Figs. 7-8: RSKPCA accuracy under different RSDE schemes
+(shadow / k-means / KDE-paring / kernel herding) at matched m."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import gaussian, fit_rskpca, shadow_rsde, make_rsde
+from repro.data import make_dataset, train_test_split, knn_classify, DATASETS
+from benchmarks.common import timeit, emit
+
+
+def run_dataset(name: str, n: int | None, ells, n_runs: int, rank: int):
+    x, y, sigma = make_dataset(name, seed=0, n=n)
+    k = DATASETS[name].knn_k
+    ker = gaussian(sigma)
+    for ell in ells:
+        rows = {}
+        for run in range(n_runs):
+            xtr, ytr, xte, yte = train_test_split(x, y, seed=run)
+            sh = shadow_rsde(xtr, ker, ell)
+            m = max(sh.m, rank + 1)
+            for scheme in ("shadow", "kmeans", "paring", "herding"):
+                def build(scheme=scheme):
+                    rsde = sh if scheme == "shadow" else make_rsde(
+                        scheme, xtr, ker, m=m)
+                    return fit_rskpca(rsde, ker, rank)
+                t_rsde = timeit(build, repeat=1, warmup=0)
+                mdl = build()
+                acc = float((knn_classify(mdl.transform(xtr), ytr,
+                                          mdl.transform(xte), k) == yte).mean())
+                rows.setdefault(scheme, []).append((acc, t_rsde))
+        for scheme, vals in rows.items():
+            arr = np.array(vals, float).mean(axis=0)
+            emit(f"fig78_{name}_{scheme}_l{ell:.1f}", float(arr[1]),
+                 accuracy=round(float(arr[0]), 4), m=m)
+
+
+def main(fast: bool = True):
+    ells = [3.0, 4.0, 5.0] if fast else \
+        [round(e, 1) for e in np.arange(3.0, 5.01, 0.2)]
+    n_runs = 2 if fast else 10
+    run_dataset("usps", 1200 if fast else None, ells, n_runs, rank=15)
+    run_dataset("yale", 1000 if fast else None, ells, n_runs, rank=10)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU = correctness-path
+timing; the BlockSpec tiling targets TPU v5e VMEM — see kernels/*.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from benchmarks.common import timeit, emit
+
+
+def main(fast: bool = True):
+    rng = np.random.default_rng(0)
+    shapes = [(1024, 128, 64), (2048, 256, 256)] if fast else \
+        [(1024, 128, 64), (4096, 512, 256), (8192, 1024, 520)]
+    for n, m, d in shapes:
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+        w = jnp.asarray(rng.uniform(1, 4, size=m), jnp.float32)
+        a = jnp.asarray(rng.normal(size=(m, 8)), jnp.float32)
+
+        t_ref = timeit(lambda: jax.block_until_ready(
+            ref.gram_ref(x, c, 3.0, 2, None, w)), repeat=3)
+        t_pal = timeit(lambda: jax.block_until_ready(
+            ops.gram(x, c, sigma=3.0, wy=w)), repeat=3)
+        emit(f"kernel_gram_n{n}_m{m}_d{d}", t_pal,
+             ref_us=round(t_ref, 1), impl="pallas_interpret")
+
+        t_ref = timeit(lambda: jax.block_until_ready(
+            ref.kpca_project_ref(x, c, a, 3.0, 2)), repeat=3)
+        t_pal = timeit(lambda: jax.block_until_ready(
+            ops.kpca_project(x, c, a, sigma=3.0)), repeat=3)
+        emit(f"kernel_project_n{n}_m{m}_d{d}", t_pal,
+             ref_us=round(t_ref, 1), impl="pallas_interpret")
+
+        t_pal = timeit(lambda: jax.block_until_ready(
+            ops.shadow_assign(x, c)[0]), repeat=3)
+        emit(f"kernel_assign_n{n}_m{m}_d{d}", t_pal, impl="pallas_interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Aggregate dry-run JSONs into the roofline table (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), emits both
+the run.py CSV rows and a markdown table to experiments/roofline.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+HEADER = ("| arch | shape | mesh | variant | compute s | memory s | "
+          "collective s | dominant | MODEL_FLOPS | useful ratio | MFU bound | "
+          "args GB/dev | temps GB/dev | note |")
+SEP = "|" + "---|" * 14
+
+
+def load_records(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def row(r: dict) -> str:
+    var = r.get("variant", "baseline")
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {var} | — | — "
+                f"| — | — | — | — | — | — | — | SKIP: {r['skip_reason']} |")
+    rf = r["roofline"]
+    mem = r.get("memory", {})
+    args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+    temp_gb = mem.get("temp_size_in_bytes", 0) / 1e9
+    note = "fits" if (args_gb + temp_gb) < 16 else "OVER 16GB HBM"
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {var} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant'].replace('_s','')} "
+            f"| {r['model_flops_total']:.3e} | {rf['useful_ratio']:.2f} "
+            f"| {rf['model_mfu_bound']:.3f} "
+            f"| {args_gb:.2f} | {temp_gb:.2f} | {note} |")
+
+
+def main(fast: bool = True, out_dir: str = "experiments/dryrun",
+         md_path: str = "experiments/roofline.md"):
+    recs = load_records(out_dir)
+    if not recs:
+        emit("roofline_no_records", 0.0, hint="run repro.launch.dryrun --all")
+        return
+    lines = [HEADER, SEP]
+    for r in recs:
+        lines.append(row(r))
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+                 f"{'' if r.get('variant', 'baseline') == 'baseline' else '_opt'}",
+                 rf["roofline_step_s"] * 1e6,
+                 dominant=rf["dominant"],
+                 compute_s=round(rf["compute_s"], 5),
+                 memory_s=round(rf["memory_s"], 5),
+                 collective_s=round(rf["collective_s"], 5),
+                 mfu_bound=round(rf["model_mfu_bound"], 4))
+    os.makedirs(os.path.dirname(md_path), exist_ok=True)
+    with open(md_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# wrote {md_path} ({len(recs)} cells)")
+
+
+if __name__ == "__main__":
+    main()

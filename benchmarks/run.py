@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the paper's
+full protocol (50 runs, 0.1 ell grid, full n); default is the fast CI-scale
+variant with identical structure.
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. table2,fig6)")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (table2_cost, fig23_eigenembedding,
+                            fig45_classification, fig6_retention,
+                            fig78_rsde_schemes, kernel_bench, roofline,
+                            rskpca_scale)
+    modules = {
+        "table2": table2_cost, "fig23": fig23_eigenembedding,
+        "fig45": fig45_classification, "fig6": fig6_retention,
+        "fig78": fig78_rsde_schemes, "kernels": kernel_bench,
+        "roofline": roofline, "rskpca_scale": rskpca_scale,
+    }
+    selected = (args.only.split(",") if args.only else list(modules))
+    failures = []
+    for name in selected:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            modules[name].main(fast=fast)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == '__main__':
+    main()

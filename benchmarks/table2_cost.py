@@ -1,0 +1,50 @@
+"""Paper Table 2: training cost and storage comparison.
+
+Measures wall-clock train/test time and storage (floats retained by the
+fitted model) for KPCA / ShDE+RSKPCA / Nystrom / WNyström on pendigits
+(n_t = 2,800 as in the paper).  Complexity claims validated:
+  ShDE+RSKPCA: O(mn + m^3) train, O(mr) space;  Nystrom: O(nr) space.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (gaussian, fit_kpca, fit, fit_nystrom,
+                        fit_weighted_nystrom, shadow_rsde)
+from repro.data import make_dataset, train_test_split
+from benchmarks.common import timeit, emit
+
+
+def main(fast: bool = True):
+    n = 1200 if fast else 3500
+    x, y, sigma = make_dataset("pendigits", seed=0, n=n)
+    xtr, ytr, xte, yte = train_test_split(x, y)
+    ker = gaussian(sigma)
+    rank = 5
+    ell = 4.0
+    m = shadow_rsde(xtr, ker, ell).m  # matched m for the competitors
+
+    fits = {
+        "kpca": lambda: fit_kpca(xtr, ker, rank),
+        "shadow_rskpca": lambda: fit(xtr, ker, rank, method="shadow", ell=ell),
+        "nystrom": lambda: fit_nystrom(xtr, ker, rank, m=m),
+        "wnystrom": lambda: fit_weighted_nystrom(xtr, ker, rank, m=m),
+    }
+    base_train = base_test = None
+    for name, f in fits.items():
+        t_train = timeit(f, repeat=3, warmup=1)
+        model = f()
+        t_test = timeit(lambda: model.transform(xte), repeat=3, warmup=1)
+        storage = model.centers.size + model.projector.size
+        if name == "kpca":
+            base_train, base_test = t_train, t_test
+        emit(f"table2_{name}", t_train,
+             test_us=round(t_test, 1),
+             storage_floats=int(storage),
+             m=model.m,
+             train_speedup=round(base_train / t_train, 2),
+             test_speedup=round(base_test / t_test, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Batched serving example: slot-based continuous batching on the decode
+program the multi-pod dry-run lowers for decode_32k.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mixtral_8x7b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

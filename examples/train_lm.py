@@ -1,0 +1,58 @@
+"""End-to-end training driver: LM + RSKPCA activation probe + checkpointing.
+
+The probe runs the paper's ShDE+RSKPCA on reservoir-sampled hidden states
+every N steps — an O(mn + m^3) representation monitor (spectrum, retention,
+embedding drift) instead of the O(n^2) naive kernel spectrum.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 30
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300  # TPU-scale
+"""
+import argparse
+import dataclasses
+
+from repro.models.config import ArchConfig
+from repro.launch.train import TrainRun, run
+
+PRESETS = {
+    # ~10M params: runs a real loss curve on this CPU container
+    "tiny": (ArchConfig(
+        name="lm-tiny", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, head_dim=32, d_ff=1024,
+        vocab_size=8192, vocab_pad_multiple=128, attn_kind="full",
+        attn_chunk=64, subquadratic=False), 8, 128),
+    # ~160M params: the 'train ~100M for a few hundred steps' deliverable
+    # (a few s/step on one v5e chip; hours on this 1-core CPU container)
+    "100m": (ArchConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=3072,
+        vocab_size=32768, vocab_pad_multiple=128, attn_kind="full",
+        attn_chunk=256, subquadratic=False), 32, 256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--probe-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg, batch, seq = PRESETS[args.preset]
+    tr = TrainRun(cfg=cfg, global_batch=batch, seq_len=seq, steps=args.steps,
+                  ckpt_dir=args.ckpt_dir, ckpt_every=10,
+                  probe_every=args.probe_every, lr=1e-3)
+    params, opt, history, extras = run(tr)
+    losses = [h["loss"] for h in history]
+    print(f"\nloss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(losses)} steps)")
+    probe = extras["probe"]
+    if probe and probe.reports:
+        print("probe reports:")
+        for r in probe.reports:
+            print(" ", r.summary())
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

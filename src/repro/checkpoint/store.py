@@ -1,0 +1,181 @@
+"""Sharded, atomic, async checkpointing (no orbax in this container).
+
+Layout:
+    <dir>/step_<N>/
+        meta.json            tree structure + per-leaf shape/dtype/sharding
+        shard_<host>.npz     every leaf-shard owned by this host, keyed
+                             "<leaf_idx>/<shard_idx>" with index metadata
+    <dir>/LATEST             published last -> restart never sees a torn ckpt
+
+Fault-tolerance contract (DESIGN.md §7):
+  * atomic publish: write into step_<N>.tmp, fsync, rename, then update LATEST;
+  * restore is sharding-agnostic: leaves are reassembled on the host and
+    re-placed under ANY target mesh/sharding -> elastic restarts onto a
+    smaller/larger mesh work (tested in tests/test_checkpoint.py);
+  * async: a single worker thread serializes saves; `wait()` joins before the
+    next save or program exit so at most one save is in flight.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+# numpy .npz cannot store ml_dtypes (bfloat16, float8_*): serialize them as
+# a same-width integer view and restore via the recorded dtype string.
+_VIEW_CODECS = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    name = arr.dtype.name
+    if name in _VIEW_CODECS:
+        return arr.view(_VIEW_CODECS[name][0])
+    return arr
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_CODECS:
+        return arr.view(_VIEW_CODECS[dtype_name][1])
+    return arr
+
+
+def _tree_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    extra_meta: dict | None = None) -> str:
+    """Blocking sharded save. Returns the published step directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, leaves, _ = _tree_paths(tree)
+    meta = {"step": step, "leaves": [], "extra": extra_meta or {}}
+    shards: dict[str, np.ndarray] = {}
+    for li, (path, leaf) in enumerate(zip(paths, leaves)):
+        leaf = jax.numpy.asarray(leaf) if np.isscalar(leaf) else leaf
+        entry = {"path": path, "shape": list(np.shape(leaf)),
+                 "dtype": str(np.asarray(jax.tree.leaves(leaf)[0]).dtype
+                              if not hasattr(leaf, "dtype") else leaf.dtype)}
+        if isinstance(leaf, jax.Array) and len(leaf.addressable_shards) > 1:
+            entry["sharded"] = True
+            for si, shard in enumerate(leaf.addressable_shards):
+                shards[f"{li}/{si}"] = _encode(np.asarray(shard.data))
+                meta.setdefault("indices", {})[f"{li}/{si}"] = [
+                    [s.start or 0, s.stop if s.stop is not None else dim]
+                    for s, dim in zip(shard.index, np.shape(leaf))
+                ]
+        else:
+            entry["sharded"] = False
+            shards[f"{li}/0"] = _encode(np.asarray(leaf))
+        meta["leaves"].append(entry)
+
+    host = jax.process_index() if jax.process_count() > 1 else 0
+    np.savez(os.path.join(tmp, f"shard_{host}.npz"), **shards)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):  # idempotent same-step re-save
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic on POSIX
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    path = os.path.join(directory, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore_checkpoint(directory: str, tree_like: PyTree,
+                       step: int | None = None,
+                       shardings: PyTree | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``tree_like``; optionally re-place each
+    leaf under ``shardings`` (same treedef) — this is the elastic-restart path.
+    """
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint under {directory}"
+    final = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(final, "meta.json")) as f:
+        meta = json.load(f)
+
+    buffers: dict[str, np.ndarray] = {}
+    for fname in sorted(os.listdir(final)):
+        if fname.startswith("shard_") and fname.endswith(".npz"):
+            with np.load(os.path.join(final, fname)) as z:
+                buffers.update({k: z[k] for k in z.files})
+
+    paths, leaves, treedef = _tree_paths(tree_like)
+    assert len(meta["leaves"]) == len(leaves), \
+        f"checkpoint has {len(meta['leaves'])} leaves, target {len(leaves)}"
+    out = []
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    for li, entry in enumerate(meta["leaves"]):
+        shape = tuple(entry["shape"])
+        if entry["sharded"]:
+            np_dtype = (_VIEW_CODECS[entry["dtype"]][1]
+                        if entry["dtype"] in _VIEW_CODECS else entry["dtype"])
+            full = np.zeros(shape, dtype=np_dtype)
+            for key, idx in meta.get("indices", {}).items():
+                if key.startswith(f"{li}/"):
+                    sl = tuple(slice(a, b) for a, b in idx)
+                    full[sl] = _decode(buffers[key], entry["dtype"])
+        else:
+            full = _decode(buffers[f"{li}/0"], entry["dtype"])
+        if shard_leaves[li] is not None:
+            out.append(jax.device_put(full, shard_leaves[li]))
+        else:
+            out.append(jax.numpy.asarray(full))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """One background save in flight at a time; device->host copy happens on
+    the caller thread (cheap), serialization/IO on the worker."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree: PyTree, extra_meta: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+        self._thread = threading.Thread(
+            target=save_checkpoint,
+            args=(self.directory, step, host_tree, extra_meta),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture (+ the paper's
+own RSKPCA experiment config).  Each module defines CONFIG (exact published
+geometry) and SMOKE (reduced same-family config for CPU tests)."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "pixtral_12b", "rwkv6_1b6", "gemma3_4b", "gemma2_9b", "qwen2_72b",
+    "yi_9b", "jamba_52b", "whisper_base", "kimi_k2", "mixtral_8x7b",
+]
+
+_ALIASES = {
+    "pixtral-12b": "pixtral_12b",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "gemma3-4b": "gemma3_4b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2-72b": "qwen2_72b",
+    "yi-9b": "yi_9b",
+    "jamba-v0.1-52b": "jamba_52b",
+    "whisper-base": "whisper_base",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

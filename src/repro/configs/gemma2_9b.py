@@ -1,0 +1,26 @@
+"""gemma2-9b [dense] — alternating local/global attention + logit softcaps.
+
+42L d_model=3584 16H (GQA kv=8) head_dim=256 d_ff=14336 vocab=256000.
+[arXiv:2408.00118; hf]  1:1 local:global -> runs long_500k.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-9b", family="dense",
+    num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8, head_dim=256,
+    d_ff=14336, vocab_size=256000,
+    attn_kind="local_global", local_global_period=2, window_size=4096,
+    softcap=50.0, final_softcap=30.0,
+    act="gelu_tanh", tie_embeddings=True, embed_scale=True,
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="gemma2-smoke", family="dense",
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="local_global", local_global_period=2, window_size=8,
+    softcap=50.0, final_softcap=30.0,
+    act="gelu_tanh", tie_embeddings=True, embed_scale=True,
+    attn_chunk=16, subquadratic=True,
+)

@@ -1,0 +1,25 @@
+"""gemma3-4b [dense] — 5:1 local:global attention, 128k context.
+
+34L d_model=2560 8H (GQA kv=4) head_dim=256 d_ff=10240 vocab=262144.
+[hf:google/gemma-3-1b-pt; unverified]  Sliding-window locals dominate ->
+runs long_500k (global layers decode O(seq) with KV cache).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-4b", family="dense",
+    num_layers=34, d_model=2560, num_heads=8, num_kv_heads=4, head_dim=256,
+    d_ff=10240, vocab_size=262144,
+    attn_kind="local_global", local_global_period=6, window_size=1024,
+    act="gelu_tanh", tie_embeddings=True, embed_scale=True,
+    rope_theta=1_000_000.0, subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="gemma3-smoke", family="dense",
+    num_layers=6, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="local_global", local_global_period=6, window_size=8,
+    act="gelu_tanh", tie_embeddings=True, embed_scale=True,
+    attn_chunk=16, subquadratic=True,
+)

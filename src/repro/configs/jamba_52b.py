@@ -1,0 +1,29 @@
+"""jamba-v0.1-52b [hybrid] — Mamba + attention 1:7 interleave, MoE every 2.
+
+32L d_model=4096 32H (GQA kv=8) head_dim=128 d_ff=14336 vocab=65536,
+MoE 16 experts top-2.  [arXiv:2403.19887; hf]
+Attention at layer i % 8 == 4 (one per Jamba block of 8); MoE on odd layers.
+7/8 layers are O(1)-state Mamba -> runs long_500k.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=65536,
+    mixer="hybrid_mamba", attn_every=8, attn_offset=4,
+    mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+    num_experts=16, top_k=2, moe_d_ff=14336, moe_every=2, moe_offset=1,
+    use_rope=False,  # jamba uses no positional encoding (Mamba carries order)
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="jamba-smoke", family="hybrid",
+    num_layers=8, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    mixer="hybrid_mamba", attn_every=8, attn_offset=4,
+    mamba_d_state=4, mamba_d_conv=4, mamba_expand=2,
+    num_experts=4, top_k=2, moe_d_ff=128, moe_every=2, moe_offset=1,
+    use_rope=False, attn_chunk=16, scan_chunk=16, capacity_factor=8.0, subquadratic=True,
+)

@@ -1,0 +1,32 @@
+"""kimi-k2-1t-a32b [moe] — trillion-parameter MoE (paper-table geometry).
+
+61L d_model=7168 64H (GQA kv=8) vocab=163840, MoE 384 experts top-8 with
+expert d_ff=2048 (+1 shared expert), first layer dense (d_ff=18432,
+DeepSeek-V3-style).  [arXiv:2501.kimi2; unverified]
+head_dim 128 (7168/64=112 rounded to the MXU-aligned 128, as in DSv3).
+Memory adaptation for a 256-chip v5e pod (DESIGN.md §10): bf16 params +
+Adafactor (factored second moment) — f32 AdamW for 1T params needs 12 TB,
+a v5e pod has 4 TB HBM.  Full attention -> long_500k SKIP.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=18432, vocab_size=163840,
+    attn_kind="full",
+    num_experts=384, top_k=8, moe_d_ff=2048, moe_every=1, moe_offset=0,
+    first_dense=1, shared_expert=True,
+    param_dtype="bfloat16", optimizer="adafactor",
+    rope_theta=50_000.0, subquadratic=False,
+)
+
+SMOKE = ArchConfig(
+    name="kimi-smoke", family="moe",
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=256, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="full",
+    num_experts=8, top_k=2, moe_d_ff=32, moe_every=1, moe_offset=0,
+    first_dense=1, shared_expert=True,
+    attn_chunk=16, capacity_factor=8.0, subquadratic=False,
+)

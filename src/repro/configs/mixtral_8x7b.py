@@ -1,0 +1,24 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8) head_dim=128 d_ff=14336 vocab=32000.
+[arXiv:2401.04088; hf]  SWA throughout (window 4096) -> runs long_500k.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=32000,
+    attn_kind="swa", window_size=4096,
+    num_experts=8, top_k=2, moe_d_ff=14336, moe_every=1, moe_offset=0,
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="mixtral-smoke", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="swa", window_size=8,
+    num_experts=4, top_k=2, moe_d_ff=128, moe_every=1, moe_offset=0,
+    attn_chunk=16, capacity_factor=8.0, subquadratic=True,
+)

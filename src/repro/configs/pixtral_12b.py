@@ -1,0 +1,24 @@
+"""pixtral-12b [vlm] — Pixtral-ViT frontend (stub) + Mistral-Nemo backbone.
+
+40L d_model=5120 32H (GQA kv=8) head_dim=128 d_ff=14336 vocab=131072.
+[hf:mistralai/Pixtral-12B-2409; unverified]  Full attention -> long_500k SKIP.
+Vision tower is a stub: input_specs provides precomputed patch embeddings.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", family="vlm",
+    num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=131072,
+    attn_kind="full", rope_theta=1_000_000.0,
+    frontend="vision", num_patch_tokens=256,
+    subquadratic=False,
+)
+
+SMOKE = ArchConfig(
+    name="pixtral-smoke", family="vlm",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="full", frontend="vision", num_patch_tokens=4,
+    attn_chunk=16, subquadratic=False,
+)

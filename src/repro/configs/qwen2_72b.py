@@ -1,0 +1,21 @@
+"""qwen2-72b [dense] — GQA with QKV bias.
+
+80L d_model=8192 64H (GQA kv=8) head_dim=128 d_ff=29568 vocab=152064.
+[arXiv:2407.10671; hf]  Pure full attention -> long_500k SKIP.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-72b", family="dense",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab_size=152064,
+    attn_kind="full", qkv_bias=True, rope_theta=1_000_000.0,
+    subquadratic=False,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="full", qkv_bias=True, attn_chunk=16, subquadratic=False,
+)

@@ -1,0 +1,22 @@
+"""rwkv6-1.6b [ssm] — Finch, attention-free, data-dependent decay.
+
+24L d_model=2048 d_ff=7168 vocab=65536, head_size 64 (32 heads).
+[arXiv:2404.05892; unverified]  O(1)/token state -> runs long_500k.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+    d_ff=7168, vocab_size=65536,
+    mixer="rwkv6", rwkv_head_size=64, act="relu", use_rope=False,
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="rwkv6-smoke", family="ssm",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    mixer="rwkv6", rwkv_head_size=16, act="relu", use_rope=False,
+    scan_chunk=16, subquadratic=True,
+)

@@ -1,0 +1,26 @@
+"""whisper-base [audio] — encoder-decoder, conv frontend STUB.
+
+6L(+6L enc) d_model=512 8H (kv=8) head_dim=64 d_ff=2048 vocab=51865.
+[arXiv:2212.04356; unverified]  input_specs provides precomputed frame
+embeddings (B, 1500, 512).  Enc-dec (not encoder-only) -> decode shapes run;
+full attention -> long_500k SKIP.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8, head_dim=64,
+    d_ff=2048, vocab_size=51865,
+    norm="layernorm", act="gelu", use_rope=False, tie_embeddings=True,
+    encoder_layers=6, encoder_seq=1500, frontend="audio",
+    subquadratic=False,
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke", family="audio",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    norm="layernorm", act="gelu", use_rope=False, tie_embeddings=True,
+    encoder_layers=2, encoder_seq=16, frontend="audio",
+    attn_chunk=16, subquadratic=False,
+)

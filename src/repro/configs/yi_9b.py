@@ -1,0 +1,20 @@
+"""yi-9b [dense] — llama-architecture GQA.
+
+48L d_model=4096 32H (GQA kv=4) head_dim=128 d_ff=11008 vocab=64000.
+[arXiv:2403.04652; hf]  Pure full attention -> long_500k SKIP.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-9b", family="dense",
+    num_layers=48, d_model=4096, num_heads=32, num_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab_size=64000,
+    attn_kind="full", subquadratic=False,
+)
+
+SMOKE = ArchConfig(
+    name="yi-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, vocab_pad_multiple=32,
+    attn_kind="full", attn_chunk=16, subquadratic=False,
+)

@@ -1,0 +1,22 @@
+# The paper's primary contribution: Reduced-Set KPCA (Algorithm 1) driven by
+# the shadow density estimate (Algorithm 2), plus every baseline the paper
+# compares against and the §5 error-bound machinery.
+from repro.core.kernels_math import (  # noqa: F401
+    Kernel, gaussian, laplacian, make_kernel, gram_matrix, weighted_gram,
+    pairwise_sq_dists, kde, rsde_eval,
+)
+from repro.core.shadow import (  # noqa: F401
+    shadow_select, shadow_select_np, shadow_select_host, two_level_merge,
+)
+from repro.core.rsde import (  # noqa: F401
+    RSDE, make_rsde, shadow_rsde, kmeans_rsde, paring_rsde, herding_rsde,
+)
+from repro.core.rskpca import (  # noqa: F401
+    KPCAModel, fit, fit_rskpca, fit_kpca, fit_subsampled_kpca,
+    embedding_alignment_error, eigenvalue_error,
+)
+from repro.core.nystrom import fit_nystrom, fit_weighted_nystrom  # noqa: F401
+from repro.core import mmd  # noqa: F401
+from repro.core.kmla import (  # noqa: F401
+    reduced_laplacian_eigenmaps, reduced_diffusion_maps,
+)

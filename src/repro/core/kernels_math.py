@@ -1,0 +1,137 @@
+"""Kernel functions and pairwise-distance machinery (paper §2, Eq. 19).
+
+The paper considers bounded, radially-symmetric kernels of the form
+
+    k(x, y) = phi(||x - y||^p / sigma^p),      phi(s) = exp(-s)
+
+with p = 2 (Gaussian) and p = 1 (Laplacian).  kappa = k(c, c) = phi(0) = 1.
+The Lipschitz-type constant of Eq. (18) is C_X^k = 1/(2 sigma^2) for the
+Gaussian and 1/sigma^2 for the Laplacian (Zhang & Kwok 2008).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """A radially symmetric kernel k(x,y) = phi(||x-y||^p / sigma^p)."""
+
+    name: str
+    sigma: float
+    p: int  # exponent of the norm (2 = Gaussian, 1 = Laplacian)
+
+    @property
+    def kappa(self) -> float:
+        """Maximum kernel value k(c, c) = phi(0)."""
+        return 1.0
+
+    @property
+    def lipschitz_const(self) -> float:
+        """C_X^k of Eq. (18)."""
+        if self.p == 2:
+            return 1.0 / (2.0 * self.sigma**2)
+        return 1.0 / self.sigma**2
+
+    def phi(self, s: Array) -> Array:
+        """The profile function phi(s) = exp(-s)."""
+        return jnp.exp(-s)
+
+    def __call__(self, x: Array, y: Array) -> Array:
+        """Gram matrix k(x_i, y_j) for x: (n, d), y: (m, d) -> (n, m)."""
+        return gram_matrix(self, x, y)
+
+    def mmd_bound(self, ell: float) -> float:
+        """Theorem 5.1 worst-case MMD bound: sqrt(2 (kappa - phi(1/ell^p)))."""
+        return float(jnp.sqrt(2.0 * (self.kappa - jnp.exp(-(1.0 / ell**self.p)))))
+
+    def eigenvalue_bound(self, ell: float) -> float:
+        """Theorem 5.2 bound on sum_i (lambda_i - lbar_i)^2 for *normalized*
+        (divided by n) Gram matrices: 2 C_X^k (sigma/ell)^2."""
+        return float(2.0 * self.lipschitz_const * (self.sigma / ell) ** 2)
+
+    def hs_bound(self, ell: float) -> float:
+        """Theorem 5.3 Hilbert-Schmidt operator bound."""
+        return float(2.0 * self.kappa * self.mmd_bound(ell))
+
+    def epsilon(self, ell: float) -> float:
+        """Shadow radius eps(ell) = sigma / ell (§4)."""
+        return self.sigma / ell
+
+
+def gaussian(sigma: float) -> Kernel:
+    return Kernel(name="gaussian", sigma=float(sigma), p=2)
+
+
+def laplacian(sigma: float) -> Kernel:
+    return Kernel(name="laplacian", sigma=float(sigma), p=1)
+
+
+def make_kernel(name: str, sigma: float) -> Kernel:
+    if name == "gaussian":
+        return gaussian(sigma)
+    if name == "laplacian":
+        return laplacian(sigma)
+    raise ValueError(f"unknown kernel {name!r}")
+
+
+@partial(jax.jit, static_argnames=())
+def pairwise_sq_dists(x: Array, y: Array) -> Array:
+    """||x_i - y_j||^2 via the MXU-friendly expansion (n,d),(m,d) -> (n,m).
+
+    Uses ||x||^2 + ||y||^2 - 2<x,y>; clamped at 0 against roundoff.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)  # (n, 1)
+    yy = jnp.sum(y * y, axis=-1, keepdims=True).T  # (1, m)
+    cross = x @ y.T  # (n, m) — the MXU matmul
+    return jnp.maximum(xx + yy - 2.0 * cross, 0.0)
+
+
+def _dist_pow(sq: Array, p: int) -> Array:
+    if p == 2:
+        return sq
+    if p == 1:
+        return jnp.sqrt(sq)
+    return jnp.power(sq, p / 2.0)
+
+
+def gram_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
+    """Dense Gram matrix K_ij = k(x_i, y_j). Pure-jnp reference path.
+
+    The Pallas kernel in ``repro.kernels.gram`` computes the same quantity
+    blockwise on TPU; this function is the numerical oracle.
+    """
+    if y is None:
+        y = x
+    sq = pairwise_sq_dists(x, y)
+    return jnp.exp(-_dist_pow(sq, kernel.p) / (kernel.sigma**kernel.p))
+
+
+def weighted_gram(kernel: Kernel, centers: Array, weights: Array) -> Array:
+    """K-tilde = W K^C W with W = diag(sqrt(w)) (Algorithm 1 / Eq. 13)."""
+    kc = gram_matrix(kernel, centers, centers)
+    sw = jnp.sqrt(weights.astype(kc.dtype))
+    return kc * sw[:, None] * sw[None, :]
+
+
+def kde(kernel: Kernel, data: Array, query: Array) -> Array:
+    """Kernel density estimate p-hat(query) = (1/n) sum_i k(x_i, q). Eq. (8)."""
+    n = data.shape[0]
+    return gram_matrix(kernel, query, data).sum(axis=1) / n
+
+
+def rsde_eval(kernel: Kernel, centers: Array, weights: Array, query: Array,
+              n: int) -> Array:
+    """Reduced-set density estimate p-tilde(query) = (1/n) sum_j w_j k(c_j, q).
+
+    Eq. (9) — note the 1/n (not 1/m) normalization: weights sum to n.
+    """
+    return (gram_matrix(kernel, query, centers) * weights[None, :]).sum(axis=1) / n

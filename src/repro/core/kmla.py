@@ -1,0 +1,86 @@
+"""Kernel manifold learning algorithms on the reduced set (paper §3, Eqs. 14-15).
+
+The generic KMLA eigenproblem (G f)(x) = int g(x,y) k(x,y) f(y) p(y) dy admits
+the same reduced-set treatment as KPCA: replace p by the RSDE and solve the
+weighted m x m problem.  We instantiate the two examples the paper names:
+
+* Laplacian eigenmaps  — g(x,y) = 1/sqrt(d(x) d(y)) (normalized graph Laplacian)
+* Diffusion maps       — anisotropic alpha-normalization then row-stochastic
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_math import Kernel, gram_matrix
+from repro.core.rsde import RSDE
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class KMLAModel:
+    kernel: Kernel
+    centers: np.ndarray
+    embedding: np.ndarray   # (m, r) embedding of the centers
+    eigvals: np.ndarray
+    method: str
+
+
+def reduced_laplacian_eigenmaps(rsde: RSDE, kernel: Kernel, rank: int) -> KMLAModel:
+    """Normalized-Laplacian spectral embedding of the reduced set.
+
+    Weighted adjacency A_ij = w_i k(c_i,c_j) w_j (each center stands for w_i
+    data points); embedding = bottom non-trivial eigenvectors of
+    I - D^{-1/2} A D^{-1/2}, equivalently top of the normalized affinity.
+    """
+    c = jnp.asarray(rsde.centers, jnp.float32)
+    w = jnp.asarray(rsde.weights, jnp.float32)
+    a = gram_matrix(kernel, c, c) * w[:, None] * w[None, :]
+    d = a.sum(axis=1)
+    d_is = 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12))
+    norm_a = a * d_is[:, None] * d_is[None, :]
+    lam, v = jnp.linalg.eigh(norm_a)
+    lam = lam[::-1][: rank + 1]
+    v = v[:, ::-1][:, : rank + 1]
+    # drop the trivial top eigenvector (constant direction)
+    return KMLAModel(
+        kernel=kernel,
+        centers=np.asarray(rsde.centers),
+        embedding=np.asarray(v[:, 1:]),
+        eigvals=np.asarray(lam[1:]),
+        method="laplacian_eigenmaps",
+    )
+
+
+def reduced_diffusion_maps(rsde: RSDE, kernel: Kernel, rank: int,
+                           alpha: float = 1.0, t: int = 1) -> KMLAModel:
+    """Diffusion maps [Coifman & Lafon] on the reduced set.
+
+    alpha-normalize the weighted affinity to correct for sampling density
+    (the RSDE weights ARE the density estimate), build the diffusion operator,
+    embed with lambda^t-scaled right eigenvectors.
+    """
+    c = jnp.asarray(rsde.centers, jnp.float32)
+    w = jnp.asarray(rsde.weights, jnp.float32)
+    a = gram_matrix(kernel, c, c) * w[:, None] * w[None, :]
+    q = a.sum(axis=1)
+    q_a = jnp.power(jnp.maximum(q, 1e-12), -alpha)
+    a = a * q_a[:, None] * q_a[None, :]
+    d = a.sum(axis=1)
+    d_is = 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12))
+    s = a * d_is[:, None] * d_is[None, :]  # symmetric conjugate of the Markov op
+    lam, v = jnp.linalg.eigh(s)
+    lam = lam[::-1][: rank + 1]
+    v = v[:, ::-1][:, : rank + 1]
+    psi = v * d_is[:, None]  # right eigenvectors of the Markov operator
+    emb = psi[:, 1:] * (lam[1:] ** t)[None, :]
+    return KMLAModel(
+        kernel=kernel,
+        centers=np.asarray(rsde.centers),
+        embedding=np.asarray(emb),
+        eigvals=np.asarray(lam[1:]),
+        method="diffusion_maps",
+    )

@@ -1,0 +1,122 @@
+"""Maximum mean discrepancy + the paper's Theorem 5.1-5.4 quantities.
+
+All quantities are defined exactly as in §5 so the property tests can check
+the closed-form bounds directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_math import Kernel, gram_matrix
+
+Array = jnp.ndarray
+
+
+def mmd_biased(kernel: Kernel, x, y) -> float:
+    """Biased MMD (Eq. 20) between equal-cardinality sets X and Y."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    kxx = gram_matrix(kernel, x, x).mean()
+    kyy = gram_matrix(kernel, y, y).mean()
+    kxy = gram_matrix(kernel, x, y).mean()
+    return float(jnp.sqrt(jnp.maximum(kxx + kyy - 2.0 * kxy, 0.0)))
+
+
+def mmd_weighted(kernel: Kernel, x, centers, weights) -> float:
+    """MMD(X, C-tilde) where C-tilde is the shadow-quantized dataset, computed
+    in weighted form without materializing the n duplicated centers:
+
+        || (1/n) sum_i psi(x_i) - (1/n) sum_j w_j psi(c_j) ||_H
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(centers, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    n = x.shape[0]
+    kxx = gram_matrix(kernel, x, x).sum() / n**2
+    kcc = (w[:, None] * gram_matrix(kernel, c, c) * w[None, :]).sum() / n**2
+    kxc = (gram_matrix(kernel, x, c) * w[None, :]).sum() / n**2
+    return float(jnp.sqrt(jnp.maximum(kxx + kcc - 2.0 * kxc, 0.0)))
+
+
+def quantized_dataset(x: np.ndarray, centers: np.ndarray,
+                      assign: np.ndarray) -> np.ndarray:
+    """C-tilde = {c_alpha(1), ..., c_alpha(n)} (§5)."""
+    return centers[assign]
+
+
+def eigenvalue_gap_sq(kernel: Kernel, x, x_quant) -> float:
+    """sum_i (lambda_i - lbar_i)^2 for the NORMALIZED (K/n) Gram matrices of
+    the data and its quantization (Theorem 5.2 LHS)."""
+    x = jnp.asarray(x, jnp.float32)
+    xq = jnp.asarray(x_quant, jnp.float32)
+    n = x.shape[0]
+    lam = jnp.linalg.eigvalsh(gram_matrix(kernel, x, x) / n)
+    lam_q = jnp.linalg.eigvalsh(gram_matrix(kernel, xq, xq) / n)
+    return float(jnp.sum((lam - lam_q) ** 2))
+
+
+def hs_operator_distance(kernel: Kernel, x, x_quant) -> float:
+    """||K_n - Kbar_n||_HS for the empirical operators (22).
+
+    In the RKHS, <k_a, k_b> = k(a, b), so the HS norm of
+    (1/n) sum_i <., k_xi> k_yi style operators reduces to Gram sums:
+
+        ||K_n - Kbar_n||_HS^2 = (1/n^2) [ sum_ij k(x_i,x_j) k(x_i,x_j)
+            - 2 sum_ij k(x_i, c_i') k(x_j, c_j') ... ]
+
+    computed here exactly via the 4-block expansion with A_i = k_{x_i},
+    B_i = k_{c_alpha(i)}:
+        ||sum_i (A_i x A_i - B_i x B_i)/n||^2
+      = (1/n^2) sum_ij [ K(x,x)_ij^2 - 2 K(x,c)_ij K(c,x... ) + K(c,c)_ij^2 ]
+    where (A x A) denotes the rank-one operator <., A> A.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(x_quant, jnp.float32)
+    n = x.shape[0]
+    kxx = gram_matrix(kernel, x, x)
+    kcc = gram_matrix(kernel, c, c)
+    kxc = gram_matrix(kernel, x, c)
+    # <A_i??A_i, A_j??A_j>_HS = k(x_i,x_j)^2 ; <A??A, B??B>_HS = k(x_i,c_j)^2
+    val = (kxx**2).sum() - 2.0 * (kxc**2).sum() + (kcc**2).sum()
+    return float(jnp.sqrt(jnp.maximum(val, 0.0)) / n)
+
+
+def eigenspace_projection_distance(kernel: Kernel, x, x_quant, rank: int) -> float:
+    """||P^D(K_n) - P^D(Kbar_n)||_HS (Theorem 5.4 LHS), computed in the span
+    of the 2n mapped points.
+
+    P^D(K_n) = sum_{i<=D} <., e_i> e_i with e_i the top unit eigenfunctions.
+    Using the Gram of the joint set Z = [x; x_quant] we orthonormalize the
+    span, express both projections as matrices in that basis, and take the
+    Frobenius norm of the difference.
+    """
+    x = np.asarray(x, np.float64)
+    c = np.asarray(x_quant, np.float64)
+    n = x.shape[0]
+    z = np.concatenate([x, c], axis=0)
+    kzz = np.asarray(gram_matrix(kernel, jnp.asarray(z), jnp.asarray(z)),
+                     np.float64)
+    # Basis for span{psi(z_i)}: kzz = R^T R (Cholesky w/ jitter); column i of R
+    # is psi(z_i) in an orthonormal basis.
+    jitter = 1e-9 * np.eye(2 * n)
+    rchol = np.linalg.cholesky(kzz + jitter).T  # (2n, 2n): psi(z_i) = R[:, i]
+    phi_x, phi_c = rchol[:, :n], rchol[:, n:]
+    proj = []
+    for phi in (phi_x, phi_c):
+        op = phi @ phi.T / n  # K_n as a matrix in the orthonormal basis
+        lam, vec = np.linalg.eigh(op)
+        top = vec[:, ::-1][:, :rank]
+        proj.append(top @ top.T)
+    return float(np.linalg.norm(proj[0] - proj[1]))
+
+
+def centroid_error_max(kernel: Kernel, x, x_quant) -> float:
+    """max_i ||k_{x_i} - k_{c_alpha(i)}||_H = max_i sqrt(2(kappa - k(x_i, c_i')))."""
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(x_quant, jnp.float32)
+    kxc = jnp.exp(
+        -((jnp.sum((x - c) ** 2, axis=1)) ** (kernel.p / 2.0))
+        / kernel.sigma**kernel.p
+    )
+    return float(jnp.sqrt(jnp.maximum(2.0 * (kernel.kappa - kxc), 0.0)).max())

@@ -1,0 +1,152 @@
+"""Reduced-set density estimates (paper §3 Eq. 9 and §6 'different RSDE schemes').
+
+Every scheme produces an ``RSDE(centers, weights, n)`` with weights summing to
+``n`` so that p-tilde(x) = (1/n) sum_j w_j k(c_j, x) approximates the KDE.
+
+Schemes (paper §6, Figs. 7-8):
+  * shadow   — Algorithm 2 (ShDE), O(mn), m derived from ell.     [this paper]
+  * kmeans   — Lloyd centers, weights = cluster sizes, O(mn) per iter.  [20]
+  * paring   — uniform subsample, uniform weights n/m, O(m).      [8]
+  * herding  — greedy MMD-descent sample from the KDE, O(n^2 m).  [5]
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_math import Kernel, gram_matrix
+from repro.core import shadow as shadow_mod
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class RSDE:
+    centers: np.ndarray  # (m, d)
+    weights: np.ndarray  # (m,), sums to n
+    n: int               # cardinality of the originating dataset
+    assign: np.ndarray | None = None  # (n,) data->center map when available
+    scheme: str = "shadow"
+
+    @property
+    def m(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def retention(self) -> float:
+        """Fraction of the data retained (Fig. 6)."""
+        return self.m / self.n
+
+
+def shadow_rsde(x, kernel: Kernel, ell: float) -> RSDE:
+    """ShDE via Algorithm 2 with eps = sigma/ell."""
+    centers, weights, assign, m = shadow_mod.shadow_select_host(
+        x, kernel.epsilon(ell)
+    )
+    return RSDE(centers, weights, n=np.shape(x)[0], assign=assign, scheme="shadow")
+
+
+@partial(jax.jit, static_argnames=("m", "iters"))
+def _kmeans(x: Array, m: int, iters: int, seed: int):
+    n, d = x.shape
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.choice(key, n, (m,), replace=False)
+    centers = x[idx]
+
+    def step(centers, _):
+        d2 = (
+            jnp.sum(x * x, 1)[:, None]
+            + jnp.sum(centers * centers, 1)[None, :]
+            - 2.0 * x @ centers.T
+        )
+        assign = jnp.argmin(d2, axis=1)
+        one_hot = jax.nn.one_hot(assign, m, dtype=x.dtype)  # (n, m)
+        counts = one_hot.sum(0)
+        sums = one_hot.T @ x
+        new_centers = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep old center for empty clusters
+        new_centers = jnp.where(counts[:, None] > 0, new_centers, centers)
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    d2 = (
+        jnp.sum(x * x, 1)[:, None]
+        + jnp.sum(centers * centers, 1)[None, :]
+        - 2.0 * x @ centers.T
+    )
+    assign = jnp.argmin(d2, axis=1)
+    counts = jax.nn.one_hot(assign, m, dtype=x.dtype).sum(0)
+    return centers, counts, assign
+
+
+def kmeans_rsde(x, kernel: Kernel, m: int, iters: int = 10, seed: int = 0) -> RSDE:
+    """k-means RSDE (density-weighted Nystrom's selector, [20])."""
+    x = jnp.asarray(x, jnp.float32)
+    centers, counts, assign = _kmeans(x, m, iters, seed)
+    return RSDE(
+        np.asarray(centers), np.asarray(counts, np.float64),
+        n=x.shape[0], assign=np.asarray(assign), scheme="kmeans",
+    )
+
+
+def paring_rsde(x, kernel: Kernel, m: int, seed: int = 0) -> RSDE:
+    """KDE paring [8] (simplified): uniform subsample, uniform weights n/m."""
+    x = np.asarray(x)
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(x.shape[0], size=m, replace=False)
+    w = np.full(m, x.shape[0] / m, dtype=np.float64)
+    return RSDE(x[idx].copy(), w, n=x.shape[0], scheme="paring")
+
+
+def herding_rsde(x, kernel: Kernel, m: int) -> RSDE:
+    """Kernel herding [5]: greedy samples maximizing the herding functional
+
+        c_{t+1} = argmax_{x in X}  mu(x) - (1/(t+1)) sum_{s<=t} k(c_s, x)
+
+    where mu(x) = (1/n) sum_i k(x_i, x) is the KDE.  O(n^2 + nm).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    k_full = gram_matrix(kernel, x, x)  # (n, n)
+    mu = k_full.mean(axis=1)  # KDE at each candidate
+
+    def step(carry, t):
+        acc, chosen = carry  # acc = sum_{s<=t-1} k(c_s, .) over candidates
+        score = mu - acc / (t + 1.0)
+        score = jnp.where(chosen, -jnp.inf, score)
+        i = jnp.argmax(score)
+        acc = acc + k_full[i]
+        chosen = chosen.at[i].set(True)
+        return (acc, chosen), i
+
+    (_, _), idx = jax.lax.scan(
+        step,
+        (jnp.zeros(n, jnp.float32), jnp.zeros(n, bool)),
+        jnp.arange(m, dtype=jnp.float32),
+    )
+    centers = np.asarray(x[idx])
+    w = np.full(m, n / m, dtype=np.float64)  # herding samples are equal-weight
+    return RSDE(centers, w, n=int(n), scheme="herding")
+
+
+_SCHEMES = {
+    "shadow": shadow_rsde,
+    "kmeans": kmeans_rsde,
+    "paring": paring_rsde,
+    "herding": herding_rsde,
+}
+
+
+def make_rsde(scheme: str, x, kernel: Kernel, *, ell: float | None = None,
+              m: int | None = None, **kw) -> RSDE:
+    """Factory. ``shadow`` takes ell; the others take an explicit m (as in the
+    paper, where the average shadow m sets m for the competing schemes)."""
+    if scheme == "shadow":
+        assert ell is not None, "shadow RSDE is parameterized by ell"
+        return shadow_rsde(x, kernel, ell)
+    assert m is not None, f"{scheme} RSDE needs an explicit m"
+    return _SCHEMES[scheme](x, kernel, m=m, **kw)

@@ -1,0 +1,152 @@
+"""Reduced-Set KPCA (paper Algorithm 1) + the KPCA baselines it is compared to.
+
+Derivation (paper §3).  Discretizing the continuous eigenproblem (3) with the
+reduced empirical density p(x) ~ (1/n) sum_i w_i delta(c_i, x) gives
+
+    K-tilde u = (n lambda) u,   K-tilde_ij = sqrt(w_i) k(c_i, c_j) sqrt(w_j)
+
+with u_i = sqrt(w_i) phi(c_i).  The Nystrom-style extension of eigenfunction
+iota to a query point x is
+
+    phi_iota(x) = (1 / (n lambda_iota)) sum_i k(x, c_i) sqrt(w_i) u_i^iota
+
+and the KPCA embedding (unit-variance principal axes, matching classical KPCA's
+alpha = v / sqrt(lambda_mat) normalization) collapses to
+
+    z(x) = k(x, C) @ A,    A = diag(sqrt(w)) U  Lambda^{-1/2}
+
+where (Lambda, U) is the eigensystem of K-tilde.  With ell -> inf every point
+is its own center (w = 1), K-tilde = K and RSKPCA == KPCA exactly — this is
+unit-tested.
+
+Training cost O(mn + m^3), evaluation O(km); the original data is DISCARDED
+after center selection (unlike Nystrom).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_math import Kernel, gram_matrix
+from repro.core.rsde import RSDE, make_rsde
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class KPCAModel:
+    """A fitted (RS)KPCA model: everything needed to embed new points.
+
+    ``projector`` already folds in the weight/eigenvalue normalization, so
+    embedding is a single fused kernel-eval + matmul: z = k(x, centers) @ projector.
+    """
+
+    kernel: Kernel
+    centers: np.ndarray      # (m, d) — the ONLY data retained
+    projector: np.ndarray    # (m, r)
+    eigvals: np.ndarray      # (r,) of the (normalized) reduced operator
+    method: str = "rskpca"
+
+    @property
+    def m(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def rank(self) -> int:
+        return self.projector.shape[1]
+
+    def transform(self, x) -> np.ndarray:
+        """Embed query points: O(q * m * (d + r))."""
+        k_xc = gram_matrix(self.kernel, jnp.asarray(x), jnp.asarray(self.centers))
+        return np.asarray(k_xc @ jnp.asarray(self.projector))
+
+
+def _top_eigh(mat: Array, rank: int):
+    """Top-``rank`` eigenpairs of a symmetric matrix, descending."""
+    lam, vec = jnp.linalg.eigh(mat)  # ascending
+    lam = lam[::-1][:rank]
+    vec = vec[:, ::-1][:, :rank]
+    return lam, vec
+
+
+def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int) -> KPCAModel:
+    """Algorithm 1: weighted m x m Gram, eigh, fold weights into projector."""
+    c = jnp.asarray(rsde.centers, jnp.float32)
+    w = jnp.asarray(rsde.weights, jnp.float32)
+    sw = jnp.sqrt(w)
+    kc = gram_matrix(kernel, c, c)
+    k_tilde = kc * sw[:, None] * sw[None, :] / rsde.n  # normalized (divide by n)
+    lam, u = _top_eigh(k_tilde, rank)
+    lam = jnp.maximum(lam, 1e-12)
+    # A = diag(sqrt(w)) U Lambda^{-1/2} / sqrt(n): z(x) = k(x,C) A has the same
+    # scale as classical KPCA's z(x) = k(x,X) V Lambda_mat^{-1/2} (checked in
+    # tests/test_rskpca.py::test_limit_equals_kpca).
+    proj = (sw[:, None] * u) / jnp.sqrt(lam)[None, :] / np.sqrt(rsde.n)
+    return KPCAModel(
+        kernel=kernel,
+        centers=np.asarray(rsde.centers, np.float32),
+        projector=np.asarray(proj),
+        eigvals=np.asarray(lam),
+        method=f"rskpca+{rsde.scheme}",
+    )
+
+
+def fit_kpca(x, kernel: Kernel, rank: int) -> KPCAModel:
+    """Classical (uncentered) KPCA baseline: O(n^3) train, O(kn) test.
+
+    The paper's operator view (§2) uses the uncentered Gram matrix — KPCA on
+    the kernel mean map — so no Gram centering is applied anywhere.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    k = gram_matrix(kernel, x, x) / n
+    lam, v = _top_eigh(k, rank)
+    lam = jnp.maximum(lam, 1e-12)
+    proj = v / jnp.sqrt(lam)[None, :] / np.sqrt(n)
+    return KPCAModel(
+        kernel=kernel,
+        centers=np.asarray(x),
+        projector=np.asarray(proj),
+        eigvals=np.asarray(lam),
+        method="kpca",
+    )
+
+
+def fit_subsampled_kpca(x, kernel: Kernel, rank: int, m: int,
+                        seed: int = 0) -> KPCAModel:
+    """Uniform-subsample KPCA baseline (paper §6 'subsampled KPCA'):
+    unweighted KPCA on m uniformly chosen points."""
+    x = np.asarray(x)
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(x.shape[0], size=m, replace=False)
+    return dataclasses.replace(fit_kpca(x[idx], kernel, rank), method="uniform")
+
+
+def fit(x, kernel: Kernel, rank: int, *, method: str = "shadow",
+        ell: float | None = None, m: int | None = None, **kw) -> KPCAModel:
+    """One-call front door: RSDE scheme name, 'kpca', or 'uniform'."""
+    if method == "kpca":
+        return fit_kpca(x, kernel, rank)
+    if method == "uniform":
+        assert m is not None
+        return fit_subsampled_kpca(x, kernel, rank, m, **kw)
+    rsde = make_rsde(method, x, kernel, ell=ell, m=m, **kw)
+    return fit_rskpca(rsde, kernel, rank)
+
+
+def embedding_alignment_error(ref: np.ndarray, approx: np.ndarray) -> float:
+    """Paper §6 eigenembedding metric: min_A ||ref - approx @ A||_F, the
+    Frobenius error after the optimal linear alignment (lstsq)."""
+    a, *_ = np.linalg.lstsq(approx, ref, rcond=None)
+    return float(np.linalg.norm(ref - approx @ a))
+
+
+def eigenvalue_error(ref: np.ndarray, approx: np.ndarray) -> float:
+    """Frobenius distance between (top-r) eigenvalue vectors, zero-padded."""
+    r = max(len(ref), len(approx))
+    a = np.zeros(r); a[: len(ref)] = ref
+    b = np.zeros(r); b[: len(approx)] = approx
+    return float(np.linalg.norm(a - b))

@@ -1,0 +1,155 @@
+"""Shadow set selection (paper Algorithm 2) — the ShDE center selector.
+
+Greedy single-pass epsilon-cover: take the first remaining point ``c``, absorb
+every point within ``eps = sigma / ell`` (the *shadow* of ``c``), weight ``c``
+by the shadow size, repeat until the dataset is exhausted.  Cost O(mn).
+
+Two implementations:
+  * ``shadow_select_np``  — numpy oracle, literal transcription of Algorithm 2.
+  * ``shadow_select``     — jittable ``lax.while_loop`` version with static
+    padding (``max_centers``); returns (centers, weights, assign, m).
+
+Invariants (property-tested in tests/test_shadow.py):
+  * every data point lies strictly within eps of its assigned center;
+  * shadow sets partition the data: weights sum to n;
+  * centers are pairwise >= eps apart ... for the *sequential* algorithm
+    (each new center was not absorbed by any earlier one);
+  * m is monotonically non-increasing in eps.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def shadow_select_np(x: np.ndarray, eps: float):
+    """Literal Algorithm 2 (numpy oracle). Returns (centers, weights, assign)."""
+    n = x.shape[0]
+    alive = np.ones(n, dtype=bool)
+    assign = np.full(n, -1, dtype=np.int64)
+    centers, weights = [], []
+    eps2 = eps * eps
+    while alive.any():
+        i = int(np.argmax(alive))  # first element of the remaining set
+        c = x[i]
+        d2 = ((x - c) ** 2).sum(axis=1)
+        shadow = alive & (d2 < eps2)  # strict inequality, per Algorithm 2
+        assign[shadow] = len(centers)
+        centers.append(c)
+        weights.append(int(shadow.sum()))
+        alive &= ~shadow
+    return np.asarray(centers), np.asarray(weights, dtype=np.float64), assign
+
+
+@partial(jax.jit, static_argnames=("max_centers",))
+def shadow_select(x: Array, eps: Array, max_centers: int):
+    """Jittable Algorithm 2.
+
+    Args:
+      x: (n, d) data.
+      eps: shadow radius sigma/ell.
+      max_centers: static bound on m (use n for exactness).
+
+    Returns:
+      centers: (max_centers, d), zero-padded beyond m.
+      weights: (max_centers,) float32, zero beyond m.  sum == n.
+      assign:  (n,) int32 data->center map (alpha in §5).
+      m:       int32 number of centers actually selected.
+    """
+    n, d = x.shape
+    xf = x.astype(jnp.float32)
+    eps2 = jnp.asarray(eps, jnp.float32) ** 2
+
+    def cond(state):
+        alive, *_ = state
+        return alive.any()
+
+    def body(state):
+        alive, centers, weights, assign, m = state
+        i = jnp.argmax(alive)  # first alive index
+        c = xf[i]
+        d2 = jnp.sum((xf - c[None, :]) ** 2, axis=1)
+        shadow = alive & (d2 < eps2)
+        centers = centers.at[m].set(c)
+        weights = weights.at[m].set(shadow.sum().astype(jnp.float32))
+        assign = jnp.where(shadow, m, assign)
+        # Guard: if m hits max_centers, absorb everything remaining into the
+        # last center so the loop terminates (only possible if max_centers < n
+        # and eps is tiny; callers use max_centers = n for exactness).
+        overflow = m >= max_centers - 1
+        shadow = jnp.where(overflow, alive, shadow)
+        assign = jnp.where(overflow & alive, m, assign)
+        weights = jnp.where(
+            overflow,
+            weights.at[m].set(alive.sum().astype(jnp.float32)),
+            weights,
+        )
+        alive = alive & ~shadow
+        return alive, centers, weights, assign, m + 1
+
+    state = (
+        jnp.ones(n, dtype=bool),
+        jnp.zeros((max_centers, d), jnp.float32),
+        jnp.zeros((max_centers,), jnp.float32),
+        jnp.full((n,), -1, jnp.int32),
+        jnp.asarray(0, jnp.int32),
+    )
+    alive, centers, weights, assign, m = jax.lax.while_loop(cond, body, state)
+    return centers, weights, assign.astype(jnp.int32), m
+
+
+def shadow_select_host(x, eps: float):
+    """Convenience host wrapper: jitted select, then slice to the true m."""
+    x = jnp.asarray(x)
+    centers, weights, assign, m = shadow_select(x, eps, max_centers=x.shape[0])
+    m = int(m)
+    return np.asarray(centers[:m]), np.asarray(weights[:m]), np.asarray(assign), m
+
+
+def two_level_merge(centers: Array, weights: Array, eps: Array,
+                    max_centers: int):
+    """Second-level shadow pass over candidate centers (distributed variant).
+
+    Runs Algorithm 2 on the *centers* themselves, summing absorbed weights
+    instead of counting points.  Quantization error of the two-level scheme is
+    at most 2*eps (triangle inequality), i.e. the paper's bounds hold with
+    ell -> ell/2 in the worst case (DESIGN.md §3).
+    """
+    n, d = centers.shape
+    cf = centers.astype(jnp.float32)
+    eps2 = jnp.asarray(eps, jnp.float32) ** 2
+    alive0 = weights > 0  # padded slots carry zero weight
+
+    def cond(state):
+        alive, *_ = state
+        return alive.any()
+
+    def body(state):
+        alive, out_c, out_w, m = state
+        i = jnp.argmax(alive)
+        c = cf[i]
+        d2 = jnp.sum((cf - c[None, :]) ** 2, axis=1)
+        shadow = alive & (d2 < eps2)
+        out_c = out_c.at[m].set(c)
+        out_w = out_w.at[m].set(jnp.where(shadow, weights, 0.0).sum())
+        overflow = m >= max_centers - 1
+        shadow = jnp.where(overflow, alive, shadow)
+        out_w = jnp.where(
+            overflow, out_w.at[m].set(jnp.where(alive, weights, 0.0).sum()), out_w
+        )
+        alive = alive & ~shadow
+        return alive, out_c, out_w, m + 1
+
+    state = (
+        alive0,
+        jnp.zeros((max_centers, d), jnp.float32),
+        jnp.zeros((max_centers,), jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    _, out_c, out_w, m = jax.lax.while_loop(cond, body, state)
+    return out_c, out_w, m

@@ -1,0 +1,99 @@
+"""Synthetic stand-ins for the paper's datasets (german/pendigits/usps/yale).
+
+The originals are not redistributable offline; we generate Gaussian-mixture
+datasets that match each one's (n, d, #classes) and — crucially for the shadow
+method — carry the same kind of *redundancy*: many points per cluster with
+within-cluster spread small relative to the kernel bandwidth, so that the
+ShDE retains <~10-30% of the data for ell in [3, 5] exactly as in Fig. 6.
+
+Bandwidths are re-derived with the median-distance heuristic (the paper used
+cross-validation on the real data; DESIGN.md §10 records this changed
+assumption).  All claims validated against the paper are therefore the
+*relative* ones: speedup ratios, method orderings, convergence in ell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.kernels_math import pairwise_sq_dists
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    n: int
+    dim: int
+    classes: int
+    clusters_per_class: int
+    cluster_std: float   # relative to unit box
+    knn_k: int           # paper Table 1 'k'
+    label_noise: float   # flip fraction — sets the k-nn accuracy ceiling
+    std_jitter: float    # lognormal sigma of per-cluster scale (smooths the
+                         # all-or-nothing shadow absorption in high dim)
+
+
+# paper Table 1 geometry; cluster_std / jitter / label_noise calibrated so the
+# retention-vs-ell curves and accuracy levels resemble the paper's Figs. 4-6
+# (validated in tests/test_paper_experiments.py).
+DATASETS = {
+    "german": DatasetSpec("german", 1000, 24, 2, 4, 0.10, 5, 0.25, 0.3),
+    "pendigits": DatasetSpec("pendigits", 3500, 16, 10, 3, 0.08, 5, 0.02, 0.3),
+    "usps": DatasetSpec("usps", 9298, 256, 10, 2, 0.07, 15, 0.04, 0.5),
+    "yale": DatasetSpec("yale", 5768, 520, 10, 2, 0.07, 10, 0.25, 0.5),
+}
+
+
+def median_sigma(x: np.ndarray, sample: int = 2000, seed: int = 0) -> float:
+    """Median-pairwise-distance bandwidth heuristic."""
+    rng = np.random.default_rng(seed)
+    if x.shape[0] > sample:
+        x = x[rng.choice(x.shape[0], sample, replace=False)]
+    d2 = np.asarray(pairwise_sq_dists(jnp.asarray(x), jnp.asarray(x)))
+    iu = np.triu_indices(d2.shape[0], k=1)
+    return float(np.sqrt(np.median(d2[iu])))
+
+
+def make_dataset(name: str, seed: int = 0, n: int | None = None):
+    """Returns (x, y, sigma): features (n, d), labels (n,), bandwidth."""
+    spec = DATASETS[name]
+    n = n or spec.n
+    rng = np.random.default_rng(seed)
+    total_clusters = spec.classes * spec.clusters_per_class
+    means = rng.uniform(0.0, 1.0, size=(total_clusters, spec.dim))
+    stds = spec.cluster_std * rng.lognormal(
+        0.0, spec.std_jitter, size=total_clusters)
+    # assign points to clusters round-robin so classes are balanced
+    cluster_of_point = rng.integers(0, total_clusters, size=n)
+    x = means[cluster_of_point] + rng.normal(
+        0.0, 1.0, size=(n, spec.dim)) * stds[cluster_of_point][:, None]
+    y = cluster_of_point % spec.classes
+    if spec.label_noise > 0:
+        flip = rng.random(n) < spec.label_noise
+        y = np.where(flip, rng.integers(0, spec.classes, size=n), y)
+    sigma = median_sigma(x, seed=seed)
+    return x.astype(np.float32), y.astype(np.int32), sigma
+
+
+def train_test_split(x, y, frac: float = 0.8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(x.shape[0])
+    cut = int(frac * x.shape[0])
+    tr, te = idx[:cut], idx[cut:]
+    return x[tr], y[tr], x[te], y[te]
+
+
+def knn_classify(train_emb: np.ndarray, train_y: np.ndarray,
+                 test_emb: np.ndarray, k: int) -> np.ndarray:
+    """k-nn in the (KPCA) embedding space — the paper's §6 classifier."""
+    d2 = np.asarray(
+        pairwise_sq_dists(jnp.asarray(test_emb), jnp.asarray(train_emb))
+    )
+    nn = np.argsort(d2, axis=1)[:, :k]
+    votes = train_y[nn]  # (n_test, k)
+    n_cls = int(train_y.max()) + 1
+    counts = np.stack([(votes == c).sum(axis=1) for c in range(n_cls)], axis=1)
+    return counts.argmax(axis=1)

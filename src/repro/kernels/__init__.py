@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   gram.py          — blocked (weighted) Gram matrix, Algorithm 1's W K^C W
+#   shadow_assign.py — nearest-center assignment (alpha map / blocked shadow)
+#   kpca_project.py  — fused k(x, C) @ A test-time projection
+# ops.py = public jit'd wrappers (padding, block sizing, TPU/interpret dispatch)
+# ref.py = pure-jnp oracles the kernels are swept against.
+from repro.kernels import ops, ref  # noqa: F401

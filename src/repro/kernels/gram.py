@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: blocked (optionally weighted) Gram matrix.
+
+The paper's O(mn)/O(n^2) hot spot.  TPU adaptation (DESIGN.md §3): the cross
+term of ||x-y||^2 is a matmul -> MXU; the kernel nonlinearity exp(-d/sigma^p)
+and the sqrt(w_i) sqrt(w_j) RSKPCA weighting (Algorithm 1's W K W) are fused
+into the same VMEM block pass, so no n x m distance matrix ever touches HBM.
+
+Grid: (ceil(n/bn), ceil(m/bm)) output tiles.  Per tile the working set is
+  x_blk (bn, d) + y_blk (bm, d) + out (bn, bm)   [f32]
+With bn = bm = 256 and d <= 8192 that is 256*8192*4*2 + 256*256*4 ~= 17 MB --
+too big for v5e's 16 MB VMEM at the extreme, so ``ops.py`` picks the block
+size from d to stay under a VMEM budget (default 8 MB) and keeps the matmul
+dims multiples of the 128-lane MXU width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _gram_kernel(x_ref, y_ref, wx_ref, wy_ref, o_ref, *, sigma: float, p: int,
+                 weighted: bool, k_steps: int):
+    """Grid step (i, j, k): accumulate the partial squared-distance for the
+    (i, j) output tile over feature chunk k; apply the kernel nonlinearity
+    (and the RSKPCA sqrt(w) weighting) on the LAST chunk.
+
+    K-chunking keeps large-d working sets inside VMEM without shrinking the
+    output tile — at d=4096 this raises arithmetic intensity from 31.5 (the
+    128x128 fallback tile) to ~117 FLOP/byte (EXPERIMENTS.md §Perf-RSKPCA).
+    """
+    k = pl.program_id(2)
+    x = x_ref[...].astype(jnp.float32)  # (bn, dk)
+    y = y_ref[...].astype(jnp.float32)  # (bm, dk)
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)          # (bn, 1)
+    yy = jnp.sum(y * y, axis=-1, keepdims=True).T        # (1, bm)
+    cross = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (bn, bm) on the MXU
+    partial = xx + yy - 2.0 * cross
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial.astype(o_ref.dtype)
+
+    @pl.when(k > 0)
+    def _accum():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + partial
+                      ).astype(o_ref.dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        d2 = jnp.maximum(o_ref[...].astype(jnp.float32), 0.0)
+        if p == 2:
+            s = d2 / (sigma * sigma)
+        elif p == 1:
+            s = jnp.sqrt(d2) / sigma
+        else:
+            s = d2 ** (p / 2.0) / sigma**p
+        g = jnp.exp(-s)
+        if weighted:
+            g = g * jnp.sqrt(wx_ref[...].astype(jnp.float32))[:, None]
+            g = g * jnp.sqrt(wy_ref[...].astype(jnp.float32))[None, :]
+        o_ref[...] = g.astype(o_ref.dtype)
+
+
+def gram_pallas(x: Array, y: Array, *, sigma: float, p: int = 2,
+                wx: Array | None = None, wy: Array | None = None,
+                block_n: int = 256, block_m: int = 256,
+                block_k: int | None = None,
+                interpret: bool = False, out_dtype=jnp.float32) -> Array:
+    """K[i, j] = sqrt(wx_i) phi(||x_i-y_j||^p/sigma^p) sqrt(wy_j).
+
+    Shapes must already be padded: n % block_n == 0, m % block_m == 0,
+    d % block_k == 0 (ops.gram handles padding/unpadding).
+    """
+    n, d = x.shape
+    m, d2_ = y.shape
+    assert d == d2_, (x.shape, y.shape)
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    block_k = block_k or d
+    assert d % block_k == 0, (d, block_k)
+    k_steps = d // block_k
+    weighted = wx is not None
+    if wx is None:
+        wx = jnp.ones((n,), jnp.float32)
+    if wy is None:
+        wy = jnp.ones((m,), jnp.float32)
+
+    grid = (n // block_n, m // block_m, k_steps)
+    kernel = functools.partial(_gram_kernel, sigma=float(sigma), p=int(p),
+                               weighted=weighted, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_n,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_m,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), out_dtype),
+        interpret=interpret,
+    )(x, y, wx, wy)

@@ -1,0 +1,143 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad inputs to block multiples (and mask/strip on the way out);
+  * pick block sizes from a VMEM budget (v5e ~16 MB/core; we budget 8 MB);
+  * dispatch: real pallas on TPU, interpret=True elsewhere (this container is
+    CPU-only, so interpret mode is also what the tests exercise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gram as _gram
+from repro.kernels import shadow_assign as _assign
+from repro.kernels import kpca_project as _project
+
+Array = jax.Array
+
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pad_rows(a: Array, mult: int, value: float = 0.0) -> Array:
+    n = a.shape[0]
+    pad = _round_up(max(n, 1), mult) - n
+    if pad == 0:
+        return a
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def pick_gram_blocks(d: int, budget: int = _VMEM_BUDGET_BYTES):
+    """(bn, bm, bk): output tile + K-chunk so the working set
+    (bn*bk + bm*bk + bn*bm) * 4B fits the VMEM budget.
+
+    K-chunking (accumulating partial distances over feature chunks) keeps
+    the 512x512 output tile at ANY d - without it d=4096 forced 128x128
+    tiles and dropped arithmetic intensity to ~31 FLOP/byte (see
+    EXPERIMENTS.md Perf-RSKPCA)."""
+    for b in (512, 256, 128):
+        for bk in (min(d, 512), 256, 128):
+            if bk > d:
+                continue
+            if (2 * b * bk + b * b) * 4 <= budget:
+                return b, b, bk
+    return 128, 128, 128
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "interpret"))
+def _gram_call(xp, yp, wxp, wyp, *, sigma, p, interpret):
+    bn, bm, bk = pick_gram_blocks(xp.shape[1])
+    bn = min(bn, xp.shape[0])
+    bm = min(bm, yp.shape[0])
+    return _gram.gram_pallas(xp, yp, sigma=sigma, p=p, wx=wxp, wy=wyp,
+                             block_n=bn, block_m=bm, block_k=bk,
+                             interpret=interpret)
+
+
+def gram(x, y, *, sigma: float, p: int = 2, wx=None, wy=None,
+         interpret: bool | None = None) -> Array:
+    """(Weighted) Gram matrix via the Pallas kernel; pads and strips."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    n, m = x.shape[0], y.shape[0]
+    bn, bm, bk = pick_gram_blocks(x.shape[1])
+    # pad the feature dim to the K-chunk (zero features don't move distances)
+    dpad = _round_up(x.shape[1], bk) - x.shape[1]
+    if dpad:
+        x = jnp.pad(x, ((0, 0), (0, dpad)))
+        y = jnp.pad(y, ((0, 0), (0, dpad)))
+    xp = _pad_rows(x, bn)
+    yp = _pad_rows(y, bm)
+    wxp = _pad_rows(jnp.asarray(wx, jnp.float32), bn) if wx is not None \
+        else jnp.ones((xp.shape[0],), jnp.float32)
+    wyp = _pad_rows(jnp.asarray(wy, jnp.float32), bm) if wy is not None \
+        else jnp.ones((yp.shape[0],), jnp.float32)
+    out = _gram_call(xp, yp, wxp, wyp, sigma=float(sigma), p=int(p),
+                     interpret=bool(interpret))
+    return out[:n, :m]
+
+
+def weighted_gram(centers, weights, *, sigma: float, p: int = 2,
+                  interpret: bool | None = None) -> Array:
+    """Algorithm 1's K-tilde = W K^C W in one fused pass."""
+    return gram(centers, centers, sigma=sigma, p=p, wx=weights, wy=weights,
+                interpret=interpret)
+
+
+def shadow_assign(x, centers, m_valid: int | None = None, *,
+                  interpret: bool | None = None):
+    """Nearest-center (idx, d2min) via the Pallas assignment kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+    centers = jnp.asarray(centers, jnp.float32)
+    n = x.shape[0]
+    m_valid = centers.shape[0] if m_valid is None else int(m_valid)
+    block_n, block_m = 512, 128
+    xp = _pad_rows(x, block_n)
+    cp = _pad_rows(centers, block_m)
+    idx, d2 = _assign.shadow_assign_pallas(
+        xp, cp, m_valid, block_n=min(block_n, xp.shape[0]),
+        block_m=block_m, interpret=bool(interpret),
+    )
+    return idx[:n], d2[:n]
+
+
+def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
+                 interpret: bool | None = None) -> Array:
+    """Fused z = k(x, C) @ A.  Pads m with zero projector rows (harmless:
+    padded centers contribute k(x, 0-pad)*0)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+    centers = jnp.asarray(centers, jnp.float32)
+    projector = jnp.asarray(projector, jnp.float32)
+    n, r = x.shape[0], projector.shape[1]
+    block_n = 512
+    xp = _pad_rows(x, block_n)
+    # pad m to a lane multiple; padded projector rows are zero so padded
+    # centers cannot contribute
+    cp = _pad_rows(centers, 128)
+    ap = _pad_rows(projector, 128)
+    rp = _round_up(r, 128)
+    ap = jnp.pad(ap, ((0, 0), (0, rp - r)))
+    out = _project.kpca_project_pallas(
+        xp, cp, ap, sigma=float(sigma), p=int(p),
+        block_n=min(block_n, xp.shape[0]), interpret=bool(interpret),
+    )
+    return out[:n, :r]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth the kernels are swept against in
+tests/test_kernels.py (interpret=True on CPU, shapes x dtypes x kernel-p).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _sq_dists(x, y):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)
+    yy = jnp.sum(y * y, axis=-1, keepdims=True).T
+    return jnp.maximum(xx + yy - 2.0 * (x @ y.T), 0.0)
+
+
+def _kernel_of_sq(d2, sigma: float, p: int):
+    if p == 2:
+        s = d2 / (sigma * sigma)
+    elif p == 1:
+        s = jnp.sqrt(d2) / sigma
+    else:
+        s = d2 ** (p / 2.0) / sigma**p
+    return jnp.exp(-s)
+
+
+def gram_ref(x, y, sigma: float, p: int = 2,
+             wx=None, wy=None) -> jnp.ndarray:
+    """(Optionally weighted) Gram block:
+    G_ij = sqrt(wx_i) * phi(||x_i - y_j||^p / sigma^p) * sqrt(wy_j).
+    """
+    g = _kernel_of_sq(_sq_dists(x, y), sigma, p)
+    if wx is not None:
+        g = g * jnp.sqrt(wx.astype(g.dtype))[:, None]
+    if wy is not None:
+        g = g * jnp.sqrt(wy.astype(g.dtype))[None, :]
+    return g
+
+
+def shadow_assign_ref(x, centers, m_valid: int):
+    """Nearest valid center: returns (idx (n,), d2min (n,)).
+
+    Centers beyond ``m_valid`` are padding and must never win.
+    """
+    d2 = _sq_dists(x, centers)
+    mask = jnp.arange(centers.shape[0])[None, :] < m_valid
+    d2 = jnp.where(mask, d2, jnp.inf)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def kpca_project_ref(x, centers, projector, sigma: float, p: int = 2):
+    """Fused embedding z = phi(dists(x, C)) @ A, A: (m, r)."""
+    g = _kernel_of_sq(_sq_dists(x, centers), sigma, p)
+    return g @ projector.astype(g.dtype)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: nearest-center assignment pass.
+
+Drives (a) the data->center map alpha of §5 and (b) the inner distance pass of
+blocked shadow selection.  Grid over row tiles of X; the (small) center set
+is resident in VMEM and swept in ``block_m`` column tiles with a running
+(argmin, min) pair so arbitrary m fits the same kernel.
+
+Padding protocol: callers pad centers to a multiple of block_m; ``m_valid``
+masks the padded tail with +inf so it can never win the argmin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _assign_kernel(x_ref, c_ref, o_idx_ref, o_d2_ref, *, m_valid: int,
+                   block_m: int):
+    x = x_ref[...].astype(jnp.float32)      # (bn, d)
+    c = c_ref[...].astype(jnp.float32)      # (m_pad, d)
+    m_pad = c.shape[0]
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)  # (bn, 1)
+
+    def sweep(k, carry):
+        best_d2, best_idx = carry
+        blk = jax.lax.dynamic_slice_in_dim(c, k * block_m, block_m, axis=0)
+        yy = jnp.sum(blk * blk, axis=-1, keepdims=True).T   # (1, bm)
+        cross = jax.lax.dot_general(
+            x, blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        d2 = jnp.maximum(xx + yy - 2.0 * cross, 0.0)        # (bn, bm)
+        col = k * block_m + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+        d2 = jnp.where(col < m_valid, d2, jnp.inf)
+        blk_d2 = jnp.min(d2, axis=1)
+        blk_idx = col[jnp.arange(d2.shape[0]), jnp.argmin(d2, axis=1)]
+        take = blk_d2 < best_d2
+        return (jnp.where(take, blk_d2, best_d2),
+                jnp.where(take, blk_idx, best_idx))
+
+    bn = x.shape[0]
+    best = (jnp.full((bn,), jnp.inf, jnp.float32),
+            jnp.zeros((bn,), jnp.int32))
+    best_d2, best_idx = jax.lax.fori_loop(0, m_pad // block_m, sweep, best)
+    o_idx_ref[...] = best_idx
+    o_d2_ref[...] = best_d2
+
+
+def shadow_assign_pallas(x: Array, centers: Array, m_valid: int, *,
+                         block_n: int = 512, block_m: int = 128,
+                         interpret: bool = False):
+    """Returns (idx (n,), d2min (n,)) of the nearest valid center."""
+    n, d = x.shape
+    m_pad, d2_ = centers.shape
+    assert d == d2_ and n % block_n == 0 and m_pad % block_m == 0
+
+    kernel = functools.partial(_assign_kernel, m_valid=int(m_valid),
+                               block_m=block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((m_pad, d), lambda i: (0, 0)),  # centers resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, centers)

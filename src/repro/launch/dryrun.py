@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_disable_hlo_passes=all-reduce-promotion")
+
+# --------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# ShapeDtypeStruct stand-ins (no allocation), record memory/cost analysis and
+# the collective schedule parsed from the partitioned HLO.
+#
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+# --------------------------------------------------------------------------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Map computation name -> its instruction lines."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line.strip())
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _loop_multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Execution count of each computation, via the while-nesting tree.
+
+    Trip counts are read from the loop-condition computation (the bound
+    appears as ``constant(N)`` in the counter comparison).  Scan-lowered
+    loops always carry that literal; if no constant is found we fall back
+    to 1 (conservative).
+    """
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or name == "main":
+            entry = name
+    if entry is None:  # last computation printed is ENTRY by convention
+        entry = list(comps)[-1]
+    mult = {name: 0 for name in comps}
+    mult[entry] = 1
+    # propagate to fixpoint (nesting depth is small)
+    for _ in range(12):
+        new = {name: 0 for name in comps}
+        new[entry] = 1
+        for name, lines in comps.items():
+            if mult.get(name, 0) == 0:
+                continue
+            for line in lines:
+                m = _WHILE_RE.search(line)
+                if not m:
+                    continue
+                cond, body = m.group(1), m.group(2)
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                new[body] = new.get(body, 0) + mult[name] * trip
+                new[cond] = new.get(cond, 0) + mult[name] * trip
+        if new == mult:
+            break
+        mult = new
+    return mult
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Loop-aware per-op-kind byte totals from the partitioned HLO.
+
+    XLA prints (and costs) while bodies ONCE; scan-lowered loops execute them
+    trip-count times.  We attribute each collective to its computation and
+    scale by the computation's execution count (``_loop_multipliers``).
+
+    Byte model (per device, documented in EXPERIMENTS.md §Roofline):
+      all-gather          -> output bytes          (ring receive volume)
+      all-reduce          -> 2 x output bytes      (reduce-scatter + all-gather)
+      reduce-scatter      -> operand bytes
+      all-to-all          -> output bytes
+      collective-permute  -> output bytes
+    """
+    comps = _split_computations(hlo_text)
+    mult = _loop_multipliers(comps)
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    static_counts = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        scale = mult.get(name, 0)
+        if scale == 0:
+            continue
+        for stripped in lines:
+            kind = None
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", stripped):
+                    kind = c
+                    break
+            if kind is None:
+                continue
+            shapes = _SHAPE_RE.findall(stripped)
+            if not shapes:
+                continue
+            out_dtype, out_dims = shapes[0]
+            out_b = _shape_bytes(out_dtype, out_dims)
+            operand_b = sum(_shape_bytes(d, s) for d, s in shapes[1:]) or out_b
+            if kind == "all-gather":
+                b = out_b
+            elif kind == "all-reduce":
+                b = 2 * out_b
+            elif kind == "reduce-scatter":
+                b = operand_b
+            else:
+                b = out_b
+            totals[kind] += b * scale
+            counts[kind] += scale
+            static_counts[kind] += 1
+    return {"bytes": totals, "counts": counts,
+            "static_counts": static_counts,
+            "total_bytes": sum(totals.values())}
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        out = {}
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            if hasattr(ma, field):
+                out[field] = int(getattr(ma, field))
+        out["repr"] = str(ma)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True, variant: str = "baseline") -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps
+    from repro.launch.flops import (
+        model_flops, active_params, total_params,
+        executed_flops_per_device, executed_hbm_bytes_per_device,
+    )
+
+    cfg = get_config(arch)
+    shape = api.SHAPES[shape_name]
+    ok, why = api.shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "skip" if not ok else "pending",
+        "skip_reason": why, "variant": variant,
+    }
+    if not ok:
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir,
+                    f"{arch}__{shape_name}__{mesh_name}{suffix}.json"),
+                    "w") as f:
+                json.dump(record, f, indent=1)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    if variant == "optimized":
+        lowered, info = steps.lower_cell_opt(cfg, shape, mesh)
+    else:
+        lowered, info = steps.lower_cell(cfg, shape, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = _memory_dict(compiled)
+    cost = _cost_dict(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = parse_collectives(hlo)
+    mf = model_flops(cfg, shape)
+    mesh_shape = dict(mesh.shape)
+    ex_flops = executed_flops_per_device(cfg, shape, mesh_shape,
+                                         variant=variant)
+    ex_bytes = executed_hbm_bytes_per_device(cfg, shape, mesh_shape,
+                                             accum=info.get("accum", 1),
+                                             variant=variant)
+
+    # --- roofline terms (TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s link,
+    #     3 usable ICI links per chip on a 2D torus direction pair) ---
+    PEAK_FLOPS, HBM_BW, LINK_BW, LINKS = 197e12, 819e9, 50e9, 3.0
+    compute_s = ex_flops["per_device_total"] / PEAK_FLOPS
+    memory_s = ex_bytes["total"] / HBM_BW
+    collective_s = coll["total_bytes"] / (LINK_BW * LINKS)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mfu = (mf / n_dev / PEAK_FLOPS) / step_s if step_s > 0 else 0.0
+
+    record.update({
+        "status": "ok",
+        "n_devices": int(n_dev),
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": mem,
+        "cost": cost,
+        "collectives": coll,
+        "model_flops_total": mf,
+        "active_params": active_params(cfg),
+        "total_params": total_params(cfg),
+        "executed_flops": ex_flops,
+        "executed_bytes": ex_bytes,
+        "roofline": {**terms, "dominant": dominant,
+                     "roofline_step_s": step_s, "model_mfu_bound": mfu,
+                     "useful_ratio": mf / max(ex_flops["executed_total"], 1.0)},
+        "hlo_bytes": len(hlo),
+        **info,
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"lower={record['lower_s']}s compile={record['compile_s']}s")
+        print("  memory_analysis:", mem.get("repr", mem))
+        flops = cost.get("flops", float("nan"))
+        print(f"  cost_analysis(raw, loops-once): flops/device={flops:.3e} "
+              f"bytes={cost.get('bytes accessed', float('nan')):.3e}")
+        print(f"  executed: flops/dev={ex_flops['per_device_total']:.3e} "
+              f"hbm_bytes/dev={ex_bytes['total']:.3e}")
+        print(f"  collectives(loop-scaled): {coll['counts']} "
+              f"total={coll['total_bytes']:.3e} B")
+        print(f"  roofline: compute={compute_s*1e3:.2f}ms "
+              f"memory={memory_s*1e3:.2f}ms coll={collective_s*1e3:.2f}ms "
+              f"dominant={dominant} mfu_bound={mfu:.3f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def _cell_done(out_dir, arch, shape, mesh_name):
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            return json.load(f).get("status") in ("ok", "skip")
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell for this mesh "
+                         "in subprocesses (resumable)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS
+        from repro.models.api import SHAPES
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = []
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            for arch in ARCH_IDS:
+                for shape in SHAPES:
+                    if _cell_done(args.out, arch, shape, mesh_name):
+                        print(f"[cached] {arch} x {shape} x {mesh_name}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--out", args.out]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    print(">>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mesh_name))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("ALL CELLS OK")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                       variant=args.variant)
+        if rec["status"] == "skip":
+            print(f"[skip] {args.arch} x {args.shape}: {rec['skip_reason']}")
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

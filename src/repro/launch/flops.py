@@ -1,0 +1,290 @@
+"""Analytic MODEL_FLOPS (the 'useful' FLOPs) per (arch x shape).
+
+train:   6 * N_active * tokens  + attention-core term (3x fwd for bwd)
+prefill: 2 * N_active * tokens  + attention-core term
+decode:  2 * N_active * batch   + attention-over-cache term
+
+Attention core (fwd) = 4 * B * Sq * Skv_eff * H * hd per attention layer
+(2 for QK^T, 2 for AV), causal halves Skv_eff for self-attention training;
+sliding-window caps Skv_eff at the window.  MoE counts top_k (+shared)
+experts only — that is the point of N_active.
+"""
+from __future__ import annotations
+
+from repro.models.config import ArchConfig, layer_kinds
+from repro.models.api import ShapeSpec
+
+
+def _attn_proj_params(cfg: ArchConfig) -> int:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return d * h * hd + 2 * d * kv * hd + h * hd * d
+
+
+def _mlp_params(cfg: ArchConfig, d_ff: int, gated: bool = True) -> int:
+    mult = 3 if gated else 2
+    return mult * cfg.d_model * d_ff
+
+
+def _mamba_params(cfg: ArchConfig) -> int:
+    di, n = cfg.d_inner, cfg.mamba_d_state
+    dt_rank = max(1, cfg.d_model // 16)
+    return (cfg.d_model * 2 * di + cfg.mamba_d_conv * di
+            + di * (dt_rank + 2 * n) + dt_rank * di + di * cfg.d_model)
+
+
+def _rwkv_params(cfg: ArchConfig) -> int:
+    return 6 * cfg.d_model * cfg.d_model
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    total = cfg.padded_vocab * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.padded_vocab
+    gated = cfg.norm == "rmsnorm"
+    for kind in layer_kinds(cfg):
+        if kind.mixer in ("attn", "swa"):
+            total += _attn_proj_params(cfg)
+        elif kind.mixer == "mamba":
+            total += _mamba_params(cfg)
+        elif kind.mixer == "rwkv":
+            total += _rwkv_params(cfg)
+        if kind.ffn == "moe":
+            total += cfg.top_k * _mlp_params(cfg, kind.d_ff, True)
+            total += cfg.d_model * cfg.num_experts  # router
+            if cfg.shared_expert:
+                total += _mlp_params(cfg, kind.d_ff, True)
+        else:
+            total += _mlp_params(cfg, kind.d_ff, gated)
+    if cfg.is_encdec():
+        total += cfg.encoder_layers * (
+            _attn_proj_params(cfg) + _mlp_params(cfg, cfg.d_ff, False))
+        total += cfg.num_layers * _attn_proj_params(cfg)  # cross attention
+    return int(total)
+
+
+def expert_params(cfg: ArchConfig) -> int:
+    """All expert-FFN weights (the 2D-resident tensors in the opt variant)."""
+    total = 0
+    for kind in layer_kinds(cfg):
+        if kind.ffn == "moe":
+            total += cfg.num_experts * _mlp_params(cfg, kind.d_ff, True)
+    return int(total)
+
+
+def total_params(cfg: ArchConfig) -> int:
+    total = active_params(cfg)
+    for kind in layer_kinds(cfg):
+        if kind.ffn == "moe":
+            total += (cfg.num_experts - cfg.top_k) * _mlp_params(
+                cfg, kind.d_ff, True)
+    return int(total)
+
+
+def _attn_core_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Forward attention-core FLOPs for the whole step (all layers)."""
+    b, s = shape.global_batch, shape.seq_len
+    h, hd = cfg.num_heads, cfg.head_dim
+    total = 0.0
+    for kind in layer_kinds(cfg):
+        if kind.mixer not in ("attn", "swa"):
+            continue
+        if shape.kind == "decode":
+            skv = min(s, cfg.window_size) if kind.mixer == "swa" else s
+            total += 4.0 * b * 1 * skv * h * hd
+        else:
+            if kind.mixer == "swa":
+                skv_avg = min(cfg.window_size, s)
+                total += 4.0 * b * s * skv_avg * h * hd
+            else:
+                total += 4.0 * b * s * (s / 2.0) * h * hd  # causal half
+    if cfg.is_encdec() and shape.kind != "decode":
+        total += cfg.encoder_layers * 4.0 * b * cfg.encoder_seq**2 * h * hd
+        total += cfg.num_layers * 4.0 * b * s * cfg.encoder_seq * h * hd
+    if cfg.is_encdec() and shape.kind == "decode":
+        total += cfg.num_layers * 4.0 * b * cfg.encoder_seq * h * hd
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Total useful FLOPs for one step across ALL devices."""
+    n_act = active_params(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    attn = _attn_core_flops(cfg, shape)
+    if shape.kind == "train":
+        return 6.0 * n_act * b * s + 3.0 * attn
+    if shape.kind == "prefill":
+        return 2.0 * n_act * b * s + attn
+    return 2.0 * n_act * b + attn  # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Executed-cost model (per device) for the roofline, DESIGN.md §8.
+#
+# XLA's compiled.cost_analysis() counts while-loop (scan) bodies ONCE, so at
+# these shapes it underreports by the trip counts (verified empirically in
+# EXPERIMENTS.md §Dry-run).  The compiled HLO still gives the collective
+# schedule (loop-scaled in dryrun.parse_collectives); FLOPs and HBM bytes come
+# from this analytic model of the exact program we lowered:
+#
+#   train  = 8 * N_active * tokens + 4 * attn_core_fwd     (remat: fwd +
+#            recomputed fwd + bwd(2x fwd) = 4x fwd multiplier on matmuls,
+#            6ND ideal -> 8ND executed)
+#   prefill = 2 * N * tokens + attn_core_fwd
+#   decode  = 2 * N_active * batch + attn_over_cache
+#
+# Per-device = per-component / sharding degree.  Components shard differently:
+# dense/moe/embed matmuls shard over data x model; attention (projections and
+# core) loses the model axis when heads don't divide it (gemma3: 8 q-heads on
+# a 16-way axis -> attention replicated across 'model', degree 16 not 256).
+# ---------------------------------------------------------------------------
+
+def _degrees(cfg: ArchConfig, mesh_shape: dict,
+             variant: str = "baseline") -> dict:
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    heads_tp = tp if cfg.num_heads % tp == 0 else 1
+    if variant == "optimized" and heads_tp == 1:
+        # sequence-parallel attention reshard recovers the model axis
+        heads_tp = tp
+    ff_tp = tp if cfg.d_ff % tp == 0 else 1
+    vocab_tp = tp if cfg.padded_vocab % tp == 0 else 1
+    expert_tp = tp if (cfg.num_experts and cfg.num_experts % tp == 0) else \
+        (tp if cfg.moe_d_ff and cfg.moe_d_ff % tp == 0 else 1)
+    if variant == "optimized" and cfg.num_experts:
+        expert_tp = tp  # 2D-resident layout: E over model, F over data
+    rwkv_tp = tp if cfg.d_model % tp == 0 else 1
+    return {
+        "attn": dp * heads_tp,
+        "mlp": dp * ff_tp,
+        "embed": dp * vocab_tp,
+        "moe": dp * expert_tp,
+        "ssm": dp * rwkv_tp,
+    }
+
+
+def executed_flops_per_device(cfg: ArchConfig, shape: ShapeSpec,
+                              mesh_shape: dict,
+                              variant: str = "baseline") -> dict:
+    """Returns {'total': flops/device, 'by_component': {...}, 'executed_total'}."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * (1 if shape.kind == "decode" else s)
+    mult = {"train": 8.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    attn_mult = {"train": 4.0, "prefill": 1.0, "decode": 1.0}[shape.kind]
+    deg = _degrees(cfg, mesh_shape, variant)
+    gated = cfg.norm == "rmsnorm"
+
+    comp = {k: 0.0 for k in ("attn_proj", "attn_core", "mlp", "moe", "ssm",
+                             "embed")}
+    for kind in layer_kinds(cfg):
+        if kind.mixer in ("attn", "swa"):
+            comp["attn_proj"] += mult * _attn_proj_params(cfg) * tokens
+        elif kind.mixer == "mamba":
+            comp["ssm"] += mult * _mamba_params(cfg) * tokens
+            comp["ssm"] += attn_mult * 10.0 * tokens * cfg.d_inner * \
+                cfg.mamba_d_state
+        elif kind.mixer == "rwkv":
+            comp["ssm"] += mult * _rwkv_params(cfg) * tokens
+            c = cfg.scan_chunk
+            comp["ssm"] += attn_mult * 4.0 * tokens * c * cfg.d_model
+        if kind.ffn == "moe":
+            active = cfg.top_k + (1 if cfg.shared_expert else 0)
+            comp["moe"] += mult * active * _mlp_params(cfg, kind.d_ff, True) \
+                * tokens
+        else:
+            comp["mlp"] += mult * _mlp_params(cfg, kind.d_ff, gated) * tokens
+    comp["attn_core"] = attn_mult * _attn_core_flops(cfg, shape)
+    v_mult = 2.0 if cfg.tie_embeddings else 2.0
+    comp["embed"] = mult * cfg.padded_vocab * cfg.d_model * tokens \
+        + v_mult * 0  # embedding lookup is gather (no flops); logits matmul:
+    comp["embed"] = mult * cfg.d_model * cfg.padded_vocab * tokens
+    if cfg.is_encdec():
+        enc_tokens = b * cfg.encoder_seq if shape.kind != "decode" else 0
+        enc = cfg.encoder_layers * (
+            _attn_proj_params(cfg) + _mlp_params(cfg, cfg.d_ff, False))
+        comp["attn_proj"] += mult * enc * enc_tokens
+        comp["attn_proj"] += mult * cfg.num_layers * _attn_proj_params(cfg) \
+            * tokens  # cross-attn projections
+
+    deg_of = {"attn_proj": deg["attn"], "attn_core": deg["attn"],
+              "mlp": deg["mlp"], "moe": deg["moe"], "ssm": deg["ssm"],
+              "embed": deg["embed"]}
+    per_dev = {k: v / deg_of[k] for k, v in comp.items()}
+    return {
+        "per_device_total": sum(per_dev.values()),
+        "per_device": per_dev,
+        "executed_total": sum(comp.values()),
+        "degrees": deg_of,
+    }
+
+
+def executed_hbm_bytes_per_device(cfg: ArchConfig, shape: ShapeSpec,
+                                  mesh_shape: dict, accum: int = 1,
+                                  variant: str = "baseline") -> dict:
+    """HBM traffic model (per device, bytes) — coarse but term-dominant:
+
+      weights : gathered bf16 weights read (fwd + remat + bwd = 3x) per
+                microstep, divided by the TP degree only (FSDP gathers
+                re-materialize the full layer on every device)
+      grads   : f32 grad accumulate read+write per microstep, /(dp*tp)
+      opt     : params + moments read/write once per step, /(dp*tp)
+      acts    : ~12 passes over (B_local, S, D) bf16 per layer per microstep
+      cache   : decode reads the KV/state cache once per step (sharded)
+    """
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    n_dev = dp * tp
+    p_total = total_params(cfg)
+    p_active = active_params(cfg)
+    bpe = 2 if cfg.param_dtype == "bfloat16" else 4
+    out = {}
+    if shape.kind == "train":
+        b_local = max(shape.global_batch // dp, 1)
+        micro_b = max(b_local // accum, 1)
+        # MoE: only active experts' weights stream from HBM per token-batch;
+        # a microbatch of micro_b*S tokens generally touches ALL experts.
+        if variant == "optimized":
+            # experts resident 2D-sharded (/n_dev); the rest TP-resident (/tp)
+            p_exp = expert_params(cfg)
+            w_read = 3.0 * accum * ((p_total - p_exp) * 2 / tp
+                                    + p_exp * 2 / n_dev)
+            g_rw = 3.0 * accum * ((p_total - p_exp) * 2 / tp
+                                  + p_exp * 2 / n_dev)  # bf16 local grads
+        else:
+            w_read = 3.0 * accum * (p_total * 2 / tp)
+            g_rw = 3.0 * accum * (p_total * 4 / n_dev)
+        o_rw = 6.0 * (p_total * (4 if cfg.optimizer == "adamw" else 1)
+                      + p_total * bpe) / n_dev
+        acts = accum * 12.0 * cfg.num_layers * micro_b * shape.seq_len \
+            * cfg.d_model * 2
+        out = {"weights": w_read, "grads": g_rw, "opt": o_rw, "acts": acts}
+    elif shape.kind == "prefill":
+        b_local = max(shape.global_batch // dp, 1)
+        out = {
+            "weights": (p_total * bpe) / tp,
+            "acts": 12.0 * cfg.num_layers * b_local * shape.seq_len
+                    * cfg.d_model * 2,
+        }
+    else:  # decode
+        cache_bytes = 0.0
+        for kind in layer_kinds(cfg):
+            if kind.mixer == "attn":
+                cache_bytes += 2 * shape.global_batch * shape.seq_len * \
+                    cfg.num_kv_heads * cfg.head_dim * 2
+            elif kind.mixer == "swa":
+                w = min(cfg.window_size, shape.seq_len)
+                cache_bytes += 2 * shape.global_batch * w * \
+                    cfg.num_kv_heads * cfg.head_dim * 2
+            elif kind.mixer == "mamba":
+                cache_bytes += shape.global_batch * cfg.d_inner * \
+                    cfg.mamba_d_state * 4
+            elif kind.mixer == "rwkv":
+                hh = cfg.d_model // cfg.rwkv_head_size
+                cache_bytes += shape.global_batch * hh * \
+                    cfg.rwkv_head_size**2 * 4
+        out = {
+            "weights": (p_active * bpe) / tp,   # active experts stream in
+            "cache": 2.0 * cache_bytes / n_dev,  # read + write-back
+        }
+    out["total"] = sum(out.values())
+    return out

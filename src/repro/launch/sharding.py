@@ -1,0 +1,396 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-aware.
+
+Every param leaf is matched by its path suffix to a rule assigning logical
+axes per trailing dim; scanned leaves (leading n_periods dim) get an extra
+None.  Logical axes resolve to mesh axes with a divisibility check — a dim
+that doesn't divide falls back to replication (e.g. gemma3's 8 q-heads on a
+16-way model axis; see EXPERIMENTS.md §Perf for the hillclimbed alternative).
+
+Strategy (baseline):
+  * FSDP: every large param shards its 'embed'-like dim over ("pod","data")
+  * TP (Megatron): heads / d_ff / vocab / experts shard over "model"
+  * activations: batch over ("pod","data"); MoE expert buffers over "model"
+  * decode KV caches: batch over "data" when divisible, else sequence over
+    ("data","model"); sequence over "model" otherwise
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    """Axes absent from the mesh (e.g. 'model' on a data-only smoke mesh)
+    count as size 1 — the rule then falls back to replication."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape.get(axes, 1)
+    return int(np.prod([mesh.shape.get(a, 1) for a in axes]))
+
+
+def _resolve(mesh: Mesh, dims, logical):
+    """logical: tuple of None | 'tp' | 'fsdp' | ('fsdp','tp')... aligned to
+    the TRAILING dims; leading dims get None.  Non-divisible -> None."""
+    spec = [None] * (len(dims) - len(logical))
+    for dim, log in zip(dims[len(dims) - len(logical):], logical):
+        if log is None:
+            spec.append(None)
+            continue
+        axes = {"tp": "model", "fsdp": _fsdp_axes(mesh)}[log] \
+            if isinstance(log, str) else log
+        size = _axis_size(mesh, axes)
+        present = (axes in mesh.axis_names) if isinstance(axes, str) else \
+            all(a in mesh.axis_names for a in axes)
+        spec.append(axes if present and size > 1 and dim % size == 0 else None)
+    return P(*spec)
+
+
+# rule table: path-suffix regex -> logical axes for the trailing dims
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("tp", "fsdp")),             # (V, D)
+    (r"lm_head$", ("fsdp", "tp")),           # (D, V)
+    (r"enc_pos$", (None, None)),
+    (r"attn.*wq$", ("fsdp", "tp", None)),    # (D, H, hd)
+    (r"attn.*wk$", ("fsdp", "tp", None)),    # (D, KV, hd)
+    (r"attn.*wv$", ("fsdp", "tp", None)),
+    (r"attn.*wo$", ("tp", None, "fsdp")),    # (H, hd, D)
+    (r"attn.*b[qkv]$", ("tp", None)),
+    (r"(mlp|shared_mlp).*w_(in|gate)$", ("fsdp", "tp")),   # (D, F)
+    (r"(mlp|shared_mlp).*w_out$", ("tp", "fsdp")),         # (F, D)
+    (r"moe.*router$", ("fsdp", None)),       # (D, E)
+    (r"moe.*w_(in|gate)$", ("tp", "fsdp", None)),  # (E, D, F): experts on model
+    (r"moe.*w_out$", ("tp", None, "fsdp")),        # (E, F, D)
+    (r"rwkv.*w_(r|k|v|g|decay)$", ("fsdp", "tp")),
+    (r"rwkv.*w_o$", ("tp", "fsdp")),
+    (r"rwkv.*bonus_u$", ("tp", None)),
+    (r"rwkv.*(decay_bias)$", (None,)),
+    (r"rwkv.*mix$", (None, None)),
+    (r"mamba.*w_in$", ("fsdp", "tp")),       # (D, 2*inner)
+    (r"mamba.*conv_w$", (None, "tp")),       # (K, inner)
+    (r"mamba.*conv_b$", ("tp",)),
+    (r"mamba.*w_bcdt$", ("tp", None)),       # (inner, r)
+    (r"mamba.*w_dt$", (None, "tp")),         # (r, inner)
+    (r"mamba.*dt_bias$", ("tp",)),
+    (r"mamba.*a_log$", ("tp", None)),        # (inner, N)
+    (r"mamba.*d_skip$", ("tp",)),
+    (r"mamba.*w_out$", ("tp", "fsdp")),      # (inner, D)
+    (r"(ln1|ln2|ln_x|final_norm|enc_norm).*", (None,)),
+]
+
+# fallback for MoE when the expert count doesn't divide the model axis
+# (mixtral: 8 experts on 16-way model) — TP inside each expert instead.
+_MOE_FALLBACK = {
+    r"moe.*w_(in|gate)$": (None, "fsdp", "tp"),
+    r"moe.*w_out$": (None, "tp", "fsdp"),
+}
+
+
+def param_spec_for(path: str, shape, mesh: Mesh, cfg: ArchConfig) -> P:
+    for pattern, logical in _PARAM_RULES:
+        if re.search(pattern, path):
+            if pattern in ("moe.*w_(in|gate)$", "moe.*w_out$") and \
+                    cfg.num_experts % mesh.shape.get("model", 1) != 0:
+                logical = _MOE_FALLBACK[pattern]
+            return _resolve(mesh, shape, logical)
+    return P()  # replicate anything unmatched (scalars, misc)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_shardings(params_spec, mesh: Mesh, cfg: ArchConfig):
+    """NamedSharding pytree matching a params (or params-spec) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec_for(_path_str(path), leaf.shape, mesh, cfg)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(opt_spec, params_spec, mesh: Mesh, cfg: ArchConfig):
+    """Optimizer states inherit their parameter's sharding where shapes
+    match; factored/scalar states fall back to replication-compatible specs."""
+    p_flat, _ = jax.tree_util.tree_flatten_with_path(params_spec)
+    by_suffix = {_path_str(path): leaf.shape for path, leaf in p_flat}
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        # strip the OptState field prefix ('mu/', 'nu/', 'vr/', 'vc/', '0/'...)
+        for key, shape in by_suffix.items():
+            if ps.endswith(key):
+                if leaf.shape == shape:
+                    return param_spec_for(key, leaf.shape, mesh, cfg)
+                # factored adafactor leaf: reuse the matching leading dims
+                full = param_spec_for(key, shape, mesh, cfg)
+                specs = list(full) + [None] * (len(shape) - len(tuple(full)))
+                if leaf.shape == shape[:-1]:       # vr: drop last dim
+                    return P(*specs[:-1])
+                if leaf.shape == shape[:-2] + shape[-1:]:  # vc: drop dim -2
+                    return P(*(specs[:-2] + specs[-1:]))
+                return P()
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_spec)
+    out = [NamedSharding(mesh, spec_of(path, leaf)) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------------ activations ---
+
+def make_activation_sharder(mesh: Mesh, cfg: ArchConfig, *, decode_batch=None):
+    """Returns shard(name, x) used by models via sharding_hooks."""
+    fsdp = _fsdp_axes(mesh)
+    tp_ok = partial(_divides, mesh)
+
+    def fn(name, x):
+        if name in ("hidden", "residual"):
+            spec = P(fsdp, *([None] * (x.ndim - 1)))
+        elif name == "logits":
+            v = x.shape[-1]
+            spec = P(fsdp, None,
+                     "model" if v % mesh.shape.get("model", 0 or 1) == 0 and
+                     "model" in mesh.axis_names else None)
+        elif name == "decode_hidden":
+            b = x.shape[0]
+            spec = P("data" if b % mesh.shape["data"] == 0 else None,
+                     *([None] * (x.ndim - 1)))
+        elif name == "moe_buffer":  # (E, C, D)
+            e = x.shape[0]
+            tp = mesh.shape.get("model", 1)
+            spec = (P("model", None, None)
+                    if "model" in mesh.axis_names and e % tp == 0
+                    else P(None, None, None))
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return fn
+
+
+def _divides(mesh, axis, dim):
+    return dim % mesh.shape[axis] == 0
+
+
+# ------------------------------------------------------------ data/caches ---
+
+def batch_shardings(batch_spec, mesh: Mesh):
+    """Train/prefill inputs: batch dim over the composed data axes."""
+    fsdp = _fsdp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        ok = b % _axis_size(mesh, fsdp) == 0
+        return NamedSharding(
+            mesh, P(fsdp if ok else None, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_spec)
+
+
+def cache_shardings(cache_spec, mesh: Mesh, cfg: ArchConfig):
+    """Decode KV caches: batch over data when divisible; sequence dim over
+    'model' (or over everything when batch=1: long_500k)."""
+    dsize = mesh.shape["data"]
+    msize = mesh.shape.get("model", 1)
+    fsdp = _fsdp_axes(mesh)
+    all_axes = tuple(a for a in (fsdp + ("model",)))
+
+    def one(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv"):  # (B, S, KV, hd)
+            b, s = shape[0], shape[1]
+            if b % dsize == 0:
+                seq_ax = "model" if s % msize == 0 else None
+                return NamedSharding(mesh, P("data", seq_ax, None, None))
+            if s % _axis_size(mesh, all_axes) == 0:
+                return NamedSharding(mesh, P(None, all_axes, None, None))
+            return NamedSharding(mesh, P(None, "model" if s % msize == 0
+                                         else None, None, None))
+        if name == "ssm":   # (B, d_inner, N)
+            b, d_inner = shape[0], shape[1]
+            return NamedSharding(mesh, P(
+                "data" if b % dsize == 0 else None,
+                "model" if d_inner % msize == 0 else None, None))
+        if name == "conv":  # (B, K-1, d_inner)
+            b, d_inner = shape[0], shape[2]
+            return NamedSharding(mesh, P(
+                "data" if b % dsize == 0 else None, None,
+                "model" if d_inner % msize == 0 else None))
+        if name == "state":  # rwkv (B, H, hd, hd)
+            b, h = shape[0], shape[1]
+            return NamedSharding(mesh, P(
+                "data" if b % dsize == 0 else None,
+                "model" if h % msize == 0 else None, None, None))
+        if name == "shift":  # (B, D)
+            b, d = shape
+            return NamedSharding(mesh, P(
+                "data" if b % dsize == 0 else None,
+                "model" if d % msize == 0 else None))
+        return NamedSharding(mesh, P())  # slot_pos etc.
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_spec)
+    # scanned cache leaves carry a leading (n_periods,) dim — detect by the
+    # 'blocks' path component and shift specs right by one.
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        if "blocks" in ps or ("dec" in ps and leaf.ndim >= 3):
+            inner = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+            ns = one(path, inner)
+            out.append(NamedSharding(mesh, P(None, *tuple(ns.spec))))
+        else:
+            out.append(one(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ===========================================================================
+# OPTIMIZED variant (EXPERIMENTS.md §Perf) — beyond-paper distribution schedule
+#
+#   1. ZeRO-1 deferred gradient reduction: the microbatch loop runs inside a
+#      shard_map that is MANUAL over the data axes (model stays auto), so
+#      weight-gradient all-reduces collapse from `accum` per step to ONE
+#      (and are communicated in bf16 — gradient compression).
+#   2. 2D-resident expert weights (E over 'model', expert-FFN F over the data
+#      axes): expert weights never move; the token set is all-gathered across
+#      data before the expert FFN and reduce-scattered after (token traffic
+#      ~36x smaller than the weight traffic it replaces at kimi scale).
+#   3. Sequence-parallel attention for archs whose head count doesn't divide
+#      the model axis (gemma3/whisper): attention inputs are resharded
+#      seq-over-model so the attention core runs 256-way instead of 16-way.
+# ===========================================================================
+
+def param_spec_for_opt(path: str, shape, mesh: Mesh, cfg: ArchConfig) -> P:
+    """Optimized param layout: TP-resident (replicated over data) except the
+    expert FFN weights, which shard F over the data axes (2D-resident)."""
+    tp = mesh.shape["model"]
+    fsdp = _fsdp_axes(mesh)
+    fsdp_size = _axis_size(mesh, fsdp)
+    lead = (None,) * (len(shape) - 3)  # scanned leaves: (n_periods, E, ., .)
+    if re.search(r"moe.*w_(in|gate)$", path):       # (..., E, D, F)
+        e, dd, ff = shape[-3:]
+        if e % tp == 0 and dd % fsdp_size == 0 and ff <= dd:
+            # 2D-resident: E over model, D over data (tokens all-to-all'd)
+            return P(*lead, "model", fsdp, None)
+        # few-experts fallback (mixtral): TP inside the expert FFN, weights
+        # replicated over data (grads deferred to the one per-step RS)
+        return P(*lead, None, None, "model" if ff % tp == 0 else None)
+    if re.search(r"moe.*w_out$", path):             # (..., E, F, D)
+        e, ff, dd = shape[-3:]
+        if e % tp == 0 and dd % fsdp_size == 0 and ff <= dd:
+            return P(*lead, "model", None, fsdp)
+        return P(*lead, None, "model" if ff % tp == 0 else None, None)
+    # everything else: drop the fsdp components (params replicated over data,
+    # gathered once per step instead of once per microstep) but keep TP.
+    base = param_spec_for(path, shape, mesh, cfg)
+    cleaned = []
+    for part in tuple(base):
+        if part is None or part == "model":
+            cleaned.append(part)
+        elif isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a == "model")
+            cleaned.append(kept[0] if len(kept) == 1 else
+                           (kept if kept else None))
+        else:  # a single fsdp axis name
+            cleaned.append(None)
+    return P(*cleaned)
+
+
+def param_shardings_opt(params_spec, mesh: Mesh, cfg: ArchConfig):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
+    out = [NamedSharding(mesh, param_spec_for_opt(_path_str(p), l.shape,
+                                                  mesh, cfg))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def manual_in_specs(params_spec, mesh: Mesh, cfg: ArchConfig):
+    """shard_map in_specs for the params: only the DATA-axis components of
+    each optimized spec (the model axis stays auto inside)."""
+    fsdp = set(_fsdp_axes(mesh))
+
+    def one(path, leaf):
+        spec = param_spec_for_opt(_path_str(path), leaf.shape, mesh, cfg)
+        parts = []
+        for part in tuple(spec):
+            if part is None or part == "model":
+                parts.append(None)
+            elif isinstance(part, (tuple, list)):
+                kept = tuple(a for a in part if a in fsdp)
+                parts.append(kept if kept else None)
+            else:
+                parts.append(part if part in fsdp else None)
+        return P(*parts)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [one(p, l) for p, l in flat])
+
+
+def make_activation_sharder_opt(mesh: Mesh, cfg: ArchConfig):
+    """Activation hook for the optimized variant, used INSIDE the manual-
+    over-data shard_map: batch dims are local (no dp constraints), the model
+    axis uses auto constraints, and the MoE gather/reduce hooks become real
+    collectives over the data axes."""
+    dp_axes = _fsdp_axes(mesh)
+    tp = mesh.shape["model"]
+
+    def constraint(x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    moe_2d = bool(cfg.num_experts) and cfg.num_experts % tp == 0 and \
+        cfg.d_model % _axis_size(mesh, dp_axes) == 0 and \
+        (cfg.moe_d_ff or cfg.d_ff) <= cfg.d_model
+
+    def fn(name, x):
+        if name == "moe_gather_logits":
+            return (jax.lax.all_gather(x, dp_axes, axis=0, tiled=True)
+                    if moe_2d else x)
+        if name == "moe_slice_d":
+            # (T_loc, D) -> (T_glob, D_loc): every rank sees all tokens,
+            # D-sliced, matching the D-over-data expert weight shards
+            return (jax.lax.all_to_all(x, dp_axes, split_axis=1,
+                                       concat_axis=0, tiled=True)
+                    if moe_2d else x)
+        if name == "moe_partial_sum":
+            return jax.lax.psum(x, dp_axes) if moe_2d else x
+        if name == "moe_out_gather":
+            return (jax.lax.all_to_all(x, dp_axes, split_axis=0,
+                                       concat_axis=1, tiled=True)
+                    if moe_2d else x)
+        if name == "moe_buffer":  # (E, C, D_loc): experts over model (auto)
+            e = x.shape[0]
+            return constraint(x, P("model" if e % tp == 0 else None,
+                                   None, None))
+        if name == "residual":
+            # keep the residual stream replicated over 'model' inside the
+            # manual region (prevents sharding churn around MoE/attention)
+            return constraint(x, P(*([None] * x.ndim)))
+        if name in ("attn_in", "attn_out") and cfg.num_heads % tp != 0:
+            # sequence-parallel attention: queries sharded over 'model'
+            s = x.shape[1]
+            if name == "attn_in" and s % tp == 0:
+                return constraint(x, P(None, "model", None))
+            if name == "attn_out":
+                return constraint(x, P(None, None, None))
+        if name == "logits":
+            v = x.shape[-1]
+            return constraint(x, P(None, None,
+                                   "model" if v % tp == 0 else None))
+        return x
+
+    return fn

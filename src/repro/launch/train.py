@@ -1,0 +1,154 @@
+"""Production training driver.
+
+Wires together every substrate: sharded step functions (launch/steps.py),
+deterministic stateless data (data/tokens.py), checkpoint/restart
+(checkpoint/), preemption + straggler watchdog (runtime/), and the paper's
+RSKPCA activation probe (core/probe.py) as a first-class monitoring feature.
+
+On this CPU container it runs smoke-scale configs on a host-device mesh; the
+same code lowers for the production pod meshes (launch/dryrun.py proves it).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.data.tokens import TokenPipeline
+from repro.launch import steps, sharding as shd
+from repro.launch.mesh import smoke_mesh
+from repro.checkpoint import AsyncCheckpointer, restore_checkpoint, latest_step
+from repro.runtime import PreemptionGuard, StepWatchdog
+from repro.core.probe import RSKPCAProbe
+
+
+@dataclasses.dataclass
+class TrainRun:
+    cfg: ArchConfig
+    global_batch: int = 8
+    seq_len: int = 64
+    steps: int = 20
+    accum: int = 1
+    lr: float = 3e-4
+    seed: int = 0
+    ckpt_dir: str | None = None
+    ckpt_every: int = 10
+    probe_every: int = 0       # 0 disables the RSKPCA probe
+    probe_rank: int = 4
+
+
+def run(tr: TrainRun, mesh=None, resume: bool = True, max_steps=None):
+    cfg = tr.cfg
+    mesh = mesh or smoke_mesh()
+    guard = PreemptionGuard()
+    watchdog = StepWatchdog()
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=tr.seq_len,
+                         global_batch=tr.global_batch, seed=tr.seed)
+
+    params_spec = api.param_specs(cfg)
+    p_sh = shd.param_shardings(params_spec, mesh, cfg)
+    opt_spec = steps.opt_specs(cfg, params_spec)
+    o_sh = shd.opt_shardings(opt_spec, params_spec, mesh, cfg)
+
+    start_step = 0
+    if tr.ckpt_dir and resume and latest_step(tr.ckpt_dir) is not None:
+        (params, opt_state), start_step = restore_checkpoint(
+            tr.ckpt_dir, (params_spec, opt_spec), shardings=(p_sh, o_sh))
+        print(f"[train] restored checkpoint at step {start_step}")
+    else:
+        with mesh:
+            params = jax.jit(
+                lambda k: api.init_params(k, cfg), out_shardings=p_sh
+            )(jax.random.PRNGKey(tr.seed))
+            opt_state = jax.jit(
+                lambda p: steps.init_opt(cfg, p), out_shardings=o_sh
+            )(params)
+
+    step_fn = steps.make_train_step(cfg, mesh, accum=tr.accum, lr=tr.lr,
+                                    remat=True)
+    batch_spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in pipe.batch(0).items()}
+    b_sh = shd.batch_shardings(batch_spec, mesh)
+    jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh,
+                                            NamedSharding(mesh, P())),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+
+    ckpt = AsyncCheckpointer(tr.ckpt_dir) if tr.ckpt_dir else None
+    probe = (RSKPCAProbe(dim=cfg.d_model, rank=tr.probe_rank,
+                         period=tr.probe_every)
+             if tr.probe_every else None)
+    hidden_fn = None
+    if probe is not None:
+        def pooled_hidden(params, batch):
+            from repro.models import transformer
+            x = transformer.embed_tokens(params, batch["tokens"], cfg)
+            h, _ = transformer.backbone_forward(params, x, cfg, remat=False)
+            return h.mean(axis=1)  # (B, D) pooled
+        hidden_fn = jax.jit(pooled_hidden)
+
+    history = []
+    end = min(tr.steps, max_steps or tr.steps)
+    for step in range(start_step, end):
+        if guard.should_stop:
+            print(f"[train] preempted at step {step}; final checkpoint")
+            break
+        watchdog.start()
+        batch = pipe.batch(step)
+        with mesh:
+            params, opt_state, metrics = jitted(
+                params, opt_state, batch, jnp.int32(step))
+        loss = float(metrics["loss"])
+        dt = watchdog.stop(step)
+        history.append({"step": step, "loss": loss, "time_s": dt})
+        if probe is not None and hidden_fn is not None:
+            with mesh:
+                probe.observe(np.asarray(hidden_fn(params, batch)))
+            rep = probe.maybe_probe(step)
+            if rep:
+                print(" ", rep.summary())
+        if step % 5 == 0 or step == end - 1:
+            print(f"[train {cfg.name}] step {step} loss {loss:.4f} "
+                  f"({dt*1e3:.0f} ms)")
+        if ckpt and (step + 1) % tr.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state))
+    if ckpt:
+        ckpt.wait()
+        final_step = len(history) + start_step
+        if latest_step(tr.ckpt_dir) != final_step:  # skip redundant re-save
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(tr.ckpt_dir, final_step, (params, opt_state))
+    return params, opt_state, history, {"straggler_flags": watchdog.flags,
+                                         "probe": probe}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--probe-every", type=int, default=0)
+    args = ap.parse_args()
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tr = TrainRun(cfg=cfg, steps=args.steps, global_batch=args.batch,
+                  seq_len=args.seq, accum=args.accum, ckpt_dir=args.ckpt_dir,
+                  probe_every=args.probe_every)
+    _, _, history, _ = run(tr)
+    print(f"[train] done: loss {history[0]['loss']:.4f} -> "
+          f"{history[-1]['loss']:.4f} over {len(history)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Unified model facade + per-(arch x shape) input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run lowers against these.  Modality frontends are stubs: vision/audio
+configs receive precomputed patch/frame embeddings as inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import transformer, encdec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """The DESIGN.md §6 skip policy."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch — long_500k needs sub-quadratic"
+    return True, ""
+
+
+# ---------------------------------------------------------------- facade ---
+
+def init_params(key, cfg: ArchConfig):
+    return (encdec.init_params(key, cfg) if cfg.is_encdec()
+            else transformer.init_params(key, cfg))
+
+
+def param_specs(cfg: ArchConfig):
+    return (encdec.param_specs(cfg) if cfg.is_encdec()
+            else transformer.param_specs(cfg))
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = True):
+    return (encdec.loss_fn(params, batch, cfg, remat=remat)
+            if cfg.is_encdec()
+            else transformer.loss_fn(params, batch, cfg, remat=remat))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return (encdec.init_cache(cfg, batch, max_seq) if cfg.is_encdec()
+            else transformer.init_cache(cfg, batch, max_seq))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    return (encdec.cache_specs(cfg, batch, max_seq) if cfg.is_encdec()
+            else transformer.cache_specs(cfg, batch, max_seq))
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    return (encdec.decode_step(params, cache, token, pos, cfg)
+            if cfg.is_encdec()
+            else transformer.decode_step(params, cache, token, pos, cfg))
+
+
+def prefill_logits(params, batch, cfg: ArchConfig):
+    if cfg.is_encdec():
+        # encode once + teacher-forced decoder forward = the prefill analogue
+        loss_inputs = dict(batch)
+        enc = encdec.encode(params, batch["audio_embed"], cfg)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
+
+        def body(x, p):
+            return encdec._dec_layer_fwd(p, x, enc, cfg), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        from repro.models.layers.norm import layernorm
+        x = layernorm(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return x.astype(jnp.float32) @ head.astype(jnp.float32)
+    return transformer.prefill(params, batch, cfg)
+
+
+# ------------------------------------------------------------ input specs ---
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the step's data inputs (excluding params/cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            return {
+                "audio_embed": _sds((b, cfg.encoder_seq, cfg.d_model),
+                                    jnp.float32),
+                "tokens": _sds((b, s), i32),
+                "labels": _sds((b, s), i32),
+            }
+        if cfg.frontend == "vision":
+            text = s - cfg.num_patch_tokens
+            return {
+                "img_embed": _sds((b, cfg.num_patch_tokens, cfg.d_model),
+                                  jnp.float32),
+                "tokens": _sds((b, text), i32),
+                "labels": _sds((b, text), i32),
+            }
+        return {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+    # decode: one new token against a seq_len KV cache
+    return {"token": _sds((b, 1), i32), "pos": _sds((), i32)}
+
+
+def make_host_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0):
+    """Small concrete batch for smoke tests (use with SMOKE configs only)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, sds in specs.items():
+        if sds.dtype == jnp.int32 and k in ("tokens", "labels"):
+            out[k] = rng.integers(0, cfg.vocab_size, sds.shape).astype("int32")
+        elif k == "pos":
+            out[k] = np.int32(0)
+        elif k == "token":
+            out[k] = rng.integers(0, cfg.vocab_size, sds.shape).astype("int32")
+        else:
+            out[k] = rng.normal(size=sds.shape).astype("float32")
+    return out

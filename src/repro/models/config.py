@@ -1,0 +1,154 @@
+"""Unified architecture config for the 10 assigned architectures.
+
+One frozen dataclass covers dense / GQA / SWA / MoE / SSM / hybrid / enc-dec;
+``layer_kinds`` resolves the per-layer (mixer, ffn) pattern, and
+``scan_grouping`` factors the layer list into
+    [unrolled prefix] + [scanned periods] + [unrolled tail]
+so heterogeneous patterns (gemma3 5:1, jamba 1:7+MoE:2) still lower as a
+single compact ``lax.scan`` body per period.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense|moe|ssm|hybrid|audio|vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # --- attention pattern ---
+    attn_kind: str = "full"     # full | swa | local_global
+    local_global_period: int = 0  # gemma3: 6 (5 local + 1 global); gemma2: 2
+    window_size: int = 0
+    softcap: float = 0.0        # attention logit softcap (gemma2)
+    final_softcap: float = 0.0  # lm-head logit softcap (gemma2)
+    qkv_bias: bool = False
+    # --- mixer family ---
+    mixer: str = "attention"    # attention | rwkv6 | hybrid_mamba
+    attn_every: int = 0         # hybrid: attention at i % attn_every == attn_offset
+    attn_offset: int = 4
+    rwkv_head_size: int = 64
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    moe_every: int = 1          # jamba: 2
+    moe_offset: int = 1
+    first_dense: int = 0        # kimi: 1
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    # --- misc arch ---
+    act: str = "silu"
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    embed_scale: bool = False   # gemma multiplies embeddings by sqrt(D)
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # --- modality frontend stubs ---
+    frontend: str = ""          # "" | audio | vision
+    num_patch_tokens: int = 0   # pixtral image tokens (precomputed embeds)
+    # --- numerics / optimizer ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer: str = "adamw"    # adamw | adafactor (memory-factored, kimi)
+    vocab_pad_multiple: int = 256
+    # --- runtime knobs ---
+    attn_chunk: int = 1024      # flash KV chunk
+    scan_chunk: int = 128       # rwkv/mamba chunk
+    # long-context support marker (decides long_500k applicability)
+    subquadratic: bool = False
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def d_inner(self) -> int:  # mamba
+        return self.mamba_expand * self.d_model
+
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str   # attn | swa | mamba | rwkv
+    ffn: str     # dense | moe
+    d_ff: int
+
+    def cache_kind(self) -> str:
+        return {"attn": "kv", "swa": "kv_ring", "mamba": "ssm",
+                "rwkv": "rwkv"}[self.mixer]
+
+
+def layer_kinds(cfg: ArchConfig) -> list[LayerKind]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        # mixer
+        if cfg.mixer == "rwkv6":
+            mixer = "rwkv"
+        elif cfg.mixer == "hybrid_mamba":
+            mixer = "attn" if (cfg.attn_every and
+                               i % cfg.attn_every == cfg.attn_offset) else "mamba"
+        elif cfg.attn_kind == "swa":
+            mixer = "swa"
+        elif cfg.attn_kind == "local_global":
+            p = cfg.local_global_period
+            mixer = "attn" if i % p == p - 1 else "swa"
+        else:
+            mixer = "attn"
+        # ffn
+        if (cfg.num_experts and i >= cfg.first_dense
+                and i % cfg.moe_every == cfg.moe_offset % cfg.moe_every):
+            ffn, d_ff = "moe", cfg.moe_d_ff or cfg.d_ff
+        else:
+            ffn, d_ff = "dense", cfg.d_ff
+        kinds.append(LayerKind(mixer, ffn, d_ff))
+    return kinds
+
+
+def scan_grouping(cfg: ArchConfig):
+    """Factor layers into (prefix_kinds, period_kinds, n_periods, tail_kinds).
+
+    The repeating period is the smallest p such that kinds[prefix:] is
+    p-periodic (up to a remainder tail of < p layers).
+    """
+    kinds = layer_kinds(cfg)
+    prefix = kinds[: cfg.first_dense]
+    rest = kinds[cfg.first_dense:]
+    if not rest:
+        return prefix, [], 0, []
+    period = 1
+    for p in range(1, len(rest) + 1):
+        ok = all(rest[i] == rest[i % p] for i in range(len(rest) - len(rest) % p))
+        if ok:
+            period = p
+            break
+    n_periods = len(rest) // period
+    tail = rest[n_periods * period:]
+    return prefix, rest[:period], n_periods, tail

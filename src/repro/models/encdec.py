@@ -1,0 +1,189 @@
+"""Encoder-decoder assembly (whisper-base backbone).
+
+Audio frontend (log-mel + conv downsampler) is a STUB per the brief:
+``input_specs`` provides precomputed frame embeddings (B, encoder_seq, D).
+Encoder: bidirectional attention + plain GELU MLP, learned positions,
+LayerNorm.  Decoder: causal self-attention + cross-attention + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers.norm import layernorm_init, layernorm
+from repro.models.sharding_hooks import shard
+
+Array = jax.Array
+
+
+def _init_enc_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layernorm_init(cfg.d_model),
+        "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.head_dim,
+                                        dtype=cfg.pdtype),
+        "ln2": layernorm_init(cfg.d_model),
+        "mlp": mlp_mod.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False,
+                                dtype=cfg.pdtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layernorm_init(cfg.d_model),
+        "self_attn": attn_mod.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                             cfg.num_kv_heads, cfg.head_dim,
+                                             dtype=cfg.pdtype),
+        "ln_x": layernorm_init(cfg.d_model),
+        "cross_attn": attn_mod.init_attention(k2, cfg.d_model, cfg.num_heads,
+                                              cfg.num_kv_heads, cfg.head_dim,
+                                              dtype=cfg.pdtype),
+        "ln2": layernorm_init(cfg.d_model),
+        "mlp": mlp_mod.init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False,
+                                dtype=cfg.pdtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kd, kt, kp1, kp2, kh = jax.random.split(key, 6)
+    v = cfg.padded_vocab
+    params = {
+        "embed": (jax.random.normal(kt, (v, cfg.d_model)) * 0.02
+                  ).astype(cfg.pdtype),
+        "enc_pos": (jax.random.normal(kp1, (cfg.encoder_seq, cfg.d_model))
+                    * 0.01).astype(cfg.pdtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(ke, cfg.encoder_layers)),
+        "enc_norm": layernorm_init(cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(kd, cfg.num_layers)),
+        "final_norm": layernorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(kh, (cfg.d_model, v))
+                             / jnp.sqrt(cfg.d_model)).astype(cfg.pdtype)
+    return params
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def encode(params, features: Array, cfg: ArchConfig) -> Array:
+    """features: (B, encoder_seq, D) precomputed frame embeddings (stub)."""
+    x = features.astype(cfg.cdtype) + params["enc_pos"].astype(cfg.cdtype)
+    x = shard("hidden", x)
+
+    def body(x, p):
+        h = layernorm(p["ln1"], x, cfg.norm_eps)
+        h = attn_mod.attention_forward(
+            p["attn"], h, n_kv=cfg.num_kv_heads, rope_theta=cfg.rope_theta,
+            causal=False, use_rope=False, chunk=cfg.attn_chunk)
+        x = x + shard("residual", h)
+        h = layernorm(p["ln2"], x, cfg.norm_eps)
+        x = x + shard("residual", mlp_mod.mlp_forward(p["mlp"], h, "gelu"))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer_fwd(p, x, enc_out, cfg: ArchConfig):
+    h = layernorm(p["ln1"], x, cfg.norm_eps)
+    h = attn_mod.attention_forward(
+        p["self_attn"], h, n_kv=cfg.num_kv_heads, rope_theta=cfg.rope_theta,
+        causal=True, use_rope=False, chunk=cfg.attn_chunk)
+    x = x + shard("residual", h)
+    h = layernorm(p["ln_x"], x, cfg.norm_eps)
+    h = attn_mod.attention_forward(
+        p["cross_attn"], h, n_kv=cfg.num_kv_heads, rope_theta=cfg.rope_theta,
+        causal=False, use_rope=False, kv_input=enc_out, chunk=cfg.attn_chunk)
+    x = x + shard("residual", h)
+    h = layernorm(p["ln2"], x, cfg.norm_eps)
+    return x + shard("residual", mlp_mod.mlp_forward(p["mlp"], h, "gelu"))
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *, remat: bool = True):
+    """batch: audio_embed (B, enc_seq, D), tokens (B, S), labels (B, S)."""
+    enc_out = encode(params, batch["audio_embed"], cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
+    x = shard("hidden", x)
+
+    def body(x, p):
+        return _dec_layer_fwd(p, x, enc_out, cfg), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layernorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    logits = shard("logits", logits)
+    from repro.models.transformer import cross_entropy
+    loss = cross_entropy(logits, batch["labels"])
+    return loss, {"ce_loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    """Self-attn KV caches + cross-attn K/V (computed once from enc_out)."""
+    hd, kv = cfg.head_dim, cfg.num_kv_heads
+    dt = cfg.cdtype
+
+    def one(_):
+        return {
+            "k": jnp.zeros((batch, max_seq, kv, hd), dt),
+            "v": jnp.zeros((batch, max_seq, kv, hd), dt),
+            "xk": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dt),
+            "xv": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dt),
+        }
+
+    return {"dec": jax.vmap(one)(jnp.arange(cfg.num_layers))}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
+    """One-token decode with self-attn cache + precomputed cross K/V."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
+    x = shard("decode_hidden", x)
+
+    def body(x, xs):
+        p, c = xs
+        h = layernorm(p["ln1"], x, cfg.norm_eps)
+        y, kc, vc = attn_mod.attention_decode(
+            p["self_attn"], h, c["k"], c["v"], pos, n_kv=cfg.num_kv_heads,
+            rope_theta=cfg.rope_theta, use_rope=False)
+        x = x + y
+        h = layernorm(p["ln_x"], x, cfg.norm_eps)
+        # cross attention against the fixed encoder K/V
+        b = h.shape[0]
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       p["cross_attn"]["wq"].astype(h.dtype))
+        g = cfg.num_heads // cfg.num_kv_heads
+        qh = q.reshape(b, cfg.num_kv_heads, g, cfg.head_dim)
+        s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                       c["xk"].astype(jnp.float32)) * cfg.head_dim**-0.5
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", pr, c["xv"].astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.num_heads, cfg.head_dim).astype(h.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", o,
+                       p["cross_attn"]["wo"].astype(h.dtype))
+        x = x + y
+        h = layernorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_mod.mlp_forward(p["mlp"], h, "gelu")
+        return x, {"k": kc, "v": vc, "xk": c["xk"], "xv": c["xv"]}
+
+    x, new_dec = jax.lax.scan(body, x, (params["dec_blocks"], cache["dec"]))
+    x = layernorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x.astype(jnp.float32) @ head.astype(jnp.float32))[:, 0, :]
+    return logits, {"dec": new_dec}

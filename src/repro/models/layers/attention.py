@@ -1,0 +1,187 @@
+"""Attention: GQA + RoPE + sliding-window + logit softcap, flash-style.
+
+``flash_attention`` is a pure-JAX blockwise (online-softmax) attention: a
+``lax.scan`` over KV chunks with running (max, denom, acc) — O(chunk * Sq)
+workspace instead of O(Sq * Skv).  This is what makes prefill_32k lowerable
+at production shapes.  GQA is computed grouped — q reshaped to
+(B, KV, group, Sq, hd) — so KV heads are never materialized repeated.
+
+Decode attention is a single fused einsum pair over the (sharded) KV cache;
+the softmax reductions over a sequence-sharded cache become XLA all-reduces
+(DESIGN.md §7 decode policy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rope import apply_rope
+
+Array = jax.Array
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool = False, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads, head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads, head_dim, d_model)) * s).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+    return p
+
+
+def _attn_mask(q_pos, k_pos, *, causal: bool, window: int | None):
+    """Boolean (Sq, Sk) mask; True = attend."""
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+def _softcap(s, cap: float | None):
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None, softcap: float | None = None,
+                    chunk: int = 1024, q_offset: int = 0) -> Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd).
+
+    ``q_offset`` is the absolute position of q[0] (for chunked prefill).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = hd**-0.5
+    qh = q.reshape(b, sq, kv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,KV,G,Sq,hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    chunk = min(chunk, sk)
+    if sk % chunk:  # non-power-of-two kv length (whisper's 1500 frames):
+        chunk = next(c for c in range(chunk, 0, -1) if sk % c == 0)
+    n_chunks = sk // chunk
+    kc = k.reshape(b, n_chunks, chunk, kv, hd)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, idx = xs  # (B, chunk, KV, hd)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bkgqd,bckd->bkgqc", qh.astype(jnp.float32),
+            k_blk.astype(jnp.float32),
+        ) * scale
+        s = _softcap(s, softcap)
+        mask = _attn_mask(q_pos, k_pos, causal=causal, window=window)
+        s = jnp.where(mask, s, -1e30)  # finite sentinel — keeps exp() NaN-free
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, v_blk.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((b, kv, g, sq), -1e30, jnp.float32),
+        jnp.zeros((b, kv, g, sq), jnp.float32),
+        jnp.zeros((b, kv, g, sq, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step, init,
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention_forward(params, x: Array, *, n_kv: int, rope_theta: float,
+                      causal: bool = True, window: int | None = None,
+                      softcap: float | None = None, chunk: int = 1024,
+                      q_offset: int = 0, kv_input: Array | None = None,
+                      use_rope: bool = True, return_kv: bool = False):
+    """Full attention sub-block: projections + flash + output projection.
+
+    ``kv_input`` switches to cross-attention (whisper decoder): K/V come from
+    the encoder output, no causal mask, no rope on K.
+    """
+    kv_src = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if use_rope:
+        q_pos = q_offset + jnp.arange(x.shape[1])
+        k_pos = jnp.arange(kv_src.shape[1])
+        q = apply_rope(q, q_pos[None, :], rope_theta)
+        k = apply_rope(k, k_pos[None, :], rope_theta)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, chunk=chunk, q_offset=q_offset)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(params, x: Array, k_cache: Array, v_cache: Array,
+                     pos: Array, *, n_kv: int, rope_theta: float,
+                     window: int | None = None, softcap: float | None = None,
+                     use_rope: bool = True):
+    """One-token decode step.
+
+    x: (B, 1, D); k_cache/v_cache: (B, S, KV, hd) with valid prefix < pos.
+    Returns (y (B, 1, D), k_cache', v_cache').
+    """
+    b, _, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if use_rope:
+        q = apply_rope(q, jnp.full((1, 1), pos, jnp.int32), rope_theta)
+        k = apply_rope(k, jnp.full((1, 1), pos, jnp.int32), rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+
+    h = q.shape[2]
+    kv = k_cache.shape[2]
+    g = h // kv
+    hd = q.shape[3]
+    qh = q.reshape(b, kv, g, hd)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qh.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * hd**-0.5
+    s = _softcap(s, softcap)
+    k_pos = jnp.arange(k_cache.shape[1])
+    valid = k_pos <= pos
+    if window is not None:
+        valid &= k_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k_cache, v_cache

@@ -1,0 +1,132 @@
+"""Mamba (S6) selective state-space block — the SSM layers of Jamba.
+
+    h_t = Abar_t * h_{t-1} + Bbar_t x_t        (diagonal A, per-channel)
+    y_t = C_t . h_t + D * x_t
+
+with input-dependent (selective) B_t, C_t, dt_t.  Discretization: ZOH on the
+diagonal:  Abar = exp(dt * A),  Bbar = dt * B  (simplified Euler for B, as in
+the reference minimal implementations).
+
+Training: chunked associative scan — within a chunk ``jax.lax.associative_scan``
+over the (a, b) pairs (first-order linear recurrence), across chunks a
+sequential ``lax.scan`` carries the (d_inner, d_state) state.  Decode is the
+O(1) recurrence (why jamba runs long_500k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_mamba(key, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dtype=jnp.float32):
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 7)
+    s = 1.0 / jnp.sqrt(d_model)
+    dt_rank = max(1, d_model // 16)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d_model, 2 * d_inner)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        # selective projections: x -> (dt_rank + 2*d_state)
+        "w_bcdt": (jax.random.normal(ks[2], (d_inner, dt_rank + 2 * d_state))
+                   * (1.0 / jnp.sqrt(d_inner))).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (dt_rank, d_inner)) * 0.1).astype(dtype),
+        "dt_bias": jnp.full((d_inner,), -2.0, dtype),  # softplus(-2) ~ 0.13
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_inner, 1))).astype(dtype),  # (d_inner, N)
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "w_out": (jax.random.normal(ks[4], (d_inner, d_model))
+                  * (1.0 / jnp.sqrt(d_inner))).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state)
+    where state is the last K-1 inputs (for decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y + b[None, None, :], new_state
+
+
+def _selective_terms(params, u):
+    """u: (B, S, d_inner) post-conv activations -> (abar, bx, c, d_skip)."""
+    d_state = params["a_log"].shape[1]
+    dt_rank = params["w_dt"].shape[0]
+    proj = u @ params["w_bcdt"].astype(u.dtype)  # (B, S, dt_rank + 2N)
+    dt_r, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r @ params["w_dt"].astype(u.dtype)
+        + params["dt_bias"].astype(u.dtype)
+    ).astype(jnp.float32)                        # (B, S, d_inner)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (d_inner, N), < 0
+    abar = jnp.exp(dt[..., None] * a[None, None])      # (B, S, d_inner, N)
+    bx = (dt * u.astype(jnp.float32))[..., None] * \
+        b_t.astype(jnp.float32)[..., None, :]          # (B, S, d_inner, N)
+    return abar, bx, c_t.astype(jnp.float32)
+
+
+def mamba_forward(params, x: Array, *, chunk: int = 256):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    d_inner = params["w_in"].shape[1] // 2
+    xz = x @ params["w_in"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, _ = _causal_conv(u, params["conv_w"].astype(x.dtype),
+                        params["conv_b"].astype(x.dtype))
+    u = jax.nn.silu(u)
+    abar, bx, c_t = _selective_terms(params, u)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+
+    def resh(t):  # (B, S, ...) -> (N, B, chunk, ...)
+        return t.reshape((b, n_chunks, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    ac, bc, cc = resh(abar), resh(bx), resh(c_t)
+
+    def outer(state, xs):
+        a_blk, b_blk, c_blk = xs  # (B, c, d_inner, N), (B, c, N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_cum, h = jax.lax.associative_scan(combine, (a_blk, b_blk), axis=1)
+        h = h + a_cum * state[:, None]          # inject carry state
+        y = jnp.einsum("bcdn,bcn->bcd", h, c_blk)
+        return h[:, -1], y
+
+    state0 = jnp.zeros((b, d_inner, params["a_log"].shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(outer, state0, (ac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(b, s, d_inner)
+    y = y + u.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def mamba_decode(params, x: Array, ssm_state: Array, conv_state: Array):
+    """One-token step. x: (B, 1, D); ssm_state: (B, d_inner, N);
+    conv_state: (B, K-1, d_inner)."""
+    xz = x @ params["w_in"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _causal_conv(u, params["conv_w"].astype(x.dtype),
+                                 params["conv_b"].astype(x.dtype),
+                                 state=conv_state)
+    u = jax.nn.silu(u)
+    abar, bx, c_t = _selective_terms(params, u)  # (B, 1, d_inner, N)
+    h = abar[:, 0] * ssm_state + bx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None, :]
+    y = y + u.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_out"].astype(x.dtype), h, conv_state

@@ -1,0 +1,34 @@
+"""Dense feed-forward blocks: gated (SwiGLU/GeGLU) and plain (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "w_in": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_forward(params, x, act: str = "silu"):
+    h = x @ params["w_in"].astype(x.dtype)
+    if "w_gate" in params:
+        h = _act(act)(x @ params["w_gate"].astype(x.dtype)) * h
+    else:
+        h = _act(act)(h)
+    return h @ params["w_out"].astype(x.dtype)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (production style).
+
+Dense one-hot dispatch tensors (T, E, C) are infeasible at kimi scale
+(T~65k local tokens x 384 experts) — we use the sort-based router every
+large-scale MoE framework converges on:
+
+  1. top-k(router logits)                 -> (T, k) expert ids + weights
+  2. flatten to T*k assignments, stable-sort by expert id
+  3. position-within-expert via cumsum over the sorted one-hot-free segment
+  4. keep position < capacity, scatter tokens into an (E*C, D) buffer
+  5. batched expert FFN  einsum('ecd,edf->ecf')  — E shards over the
+     'model'/'expert' mesh axis, which turns steps 4/5's gather/scatter into
+     an all-to-all under SPMD
+  6. combine: weighted scatter-add back to (T, D)
+
+Aux losses: load-balance (Switch-style) + router z-loss, returned for logging.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_hooks import shard
+
+Array = jax.Array
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts)) * s_in
+                   ).astype(jnp.float32),  # router stays f32
+        "w_in": (jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * s_in
+                 ).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (n_experts, d_ff, d_model)) * s_out
+                  ).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (n_experts, d_model, d_ff))
+                       * s_in).astype(dtype)
+    return p
+
+
+def moe_forward(params, x: Array, *, top_k: int, capacity_factor: float = 1.25,
+                act=jax.nn.silu):
+    """x: (B, S, D) -> (y, aux) with aux = {load_balance_loss, router_z_loss}.
+
+    Sharding hooks (identity by default; the optimized variant activates
+    them INSIDE its manual-over-data shard_map — EXPERIMENTS.md §Perf):
+      moe_gather_logits — all-gather router logits over data (tiny);
+      moe_slice_d       — all-to-all (T_loc, D) -> (T_glob, D_loc): every
+                          rank sees ALL tokens but only its D-slice, so the
+                          D-sharded-over-data expert weights never move and
+                          their grads are local-complete;
+      moe_partial_sum   — psum over data completing the D-contraction of the
+                          (small) expert hidden h/g;
+      moe_out_gather    — inverse all-to-all (T_glob, D_loc) -> (T_loc, D).
+    """
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    e = params["router"].shape[1]
+
+    logits = shard("moe_gather_logits",
+                   xf.astype(jnp.float32) @ params["router"])   # (T, E)
+    xf_d = shard("moe_slice_d", xf)                             # (T, D_loc)
+    t, d_loc = xf_d.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, top_k)                # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses ----
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_e.reshape(-1)].add(
+        jnp.ones((t * top_k,), jnp.float32)) / (t * top_k)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch ----
+    cap = int(max(1, capacity_factor * t * top_k / e))  # t = dispatched rows
+    flat_e = gate_e.reshape(-1)                                 # (T*k,)
+    flat_w = gate_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_e, stable=True)                    # sort by expert
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    # position within expert segment: running index minus segment start
+    ones = jnp.ones_like(se)
+    pos_global = jnp.cumsum(ones) - 1
+    seg_start = jnp.full((e,), t * top_k, se.dtype).at[se].min(
+        pos_global.astype(se.dtype))
+    pos_in_e = pos_global.astype(jnp.int32) - seg_start[se].astype(jnp.int32)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)        # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d_loc), x.dtype).at[slot].add(xf_d[stok])
+    buf = shard("moe_buffer", buf[:-1].reshape(e, cap, d_loc))  # (E, C, D_loc)
+
+    # ---- expert FFN (batched over E; E shards over the expert axis) ----
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_in"].astype(x.dtype))
+    h = shard("moe_partial_sum", h)   # completes the D-contraction over data
+    if "w_gate" in params:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(x.dtype))
+        g = shard("moe_partial_sum", g)
+        h = act(g) * h
+    else:
+        h = act(h)
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(x.dtype))
+
+    # ---- combine ----
+    out_flat = out.reshape(e * cap, d_loc)
+    contrib = out_flat[jnp.minimum(slot, e * cap - 1)] * (
+        sw * keep.astype(jnp.float32))[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d_loc), x.dtype).at[stok].add(contrib)
+    y = shard("moe_out_gather", y)                              # (T, D)
+    aux = {"load_balance_loss": lb_loss, "router_z_loss": z_loss}
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,151 @@
+"""RWKV-6 "Finch" time-mix block (arXiv:2404.05892) — attention-free.
+
+Linear recurrence with data-dependent per-channel decay:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Training uses the chunked form (flash-linear-attention style): within a chunk
+of length c the interaction is an O(c^2) masked matmul with relative decays in
+log space; across chunks the (hd x hd) state is carried by a scan.  Decode is
+the O(1)-per-token recurrence — this is why rwkv6 runs the long_500k cell.
+
+Heads of size ``head_size`` (64): d_model = H * head_size.
+Token-shift (mixing with the previous token) uses the simplified static mix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_rwkv6(key, d_model: int, head_size: int, dtype=jnp.float32):
+    n_heads = d_model // head_size
+    ks = jax.random.split(key, 8)
+    s = 1.0 / jnp.sqrt(d_model)
+
+    def lin(k):
+        return (jax.random.normal(k, (d_model, d_model)) * s).astype(dtype)
+
+    return {
+        "w_r": lin(ks[0]), "w_k": lin(ks[1]), "w_v": lin(ks[2]),
+        "w_g": lin(ks[3]), "w_o": lin(ks[4]),
+        # decay projection (data-dependent, Finch's signature feature)
+        "w_decay": lin(ks[5]),
+        "decay_bias": jnp.full((d_model,), -4.0, dtype),  # slow decay init
+        "bonus_u": (jax.random.normal(ks[6], (n_heads, head_size)) * 0.1
+                    ).astype(dtype),
+        "mix": (0.5 * jnp.ones((5, d_model))).astype(dtype),  # r,k,v,g,decay
+    }
+
+
+def _token_shift(x):
+    """x_{t-1} with zero pad at t=0. x: (B, S, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def _project(params, x):
+    xs = _token_shift(x)
+    mix = params["mix"].astype(x.dtype)
+    xr = x * mix[0] + xs * (1 - mix[0])
+    xk = x * mix[1] + xs * (1 - mix[1])
+    xv = x * mix[2] + xs * (1 - mix[2])
+    xg = x * mix[3] + xs * (1 - mix[3])
+    xw = x * mix[4] + xs * (1 - mix[4])
+    r = xr @ params["w_r"].astype(x.dtype)
+    k = xk @ params["w_k"].astype(x.dtype)
+    v = xv @ params["w_v"].astype(x.dtype)
+    g = jax.nn.silu(xg @ params["w_g"].astype(x.dtype))
+    # per-channel decay in (0, 1):  w = exp(-exp(logw))
+    logw = (xw @ params["w_decay"].astype(x.dtype)
+            + params["decay_bias"].astype(x.dtype))
+    return r, k, v, g, logw
+
+
+def rwkv6_forward(params, x: Array, *, head_size: int, chunk: int = 128):
+    """Chunked-parallel forward. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    h = d // head_size
+    r, k, v, g, logw = _project(params, x)
+
+    def heads(t):  # (B, S, D) -> (B, H, S, hd)
+        return t.reshape(b, s, h, head_size).transpose(0, 2, 1, 3)
+
+    r, k, v = heads(r), heads(k), heads(v)
+    # neg decay rate per channel, clamped for chunk-local log-space safety
+    nw = -jnp.exp(jnp.clip(logw.astype(jnp.float32), -8.0, 2.0))  # (B,S,D) <0
+    nw = heads(nw)  # (B, H, S, hd)
+    u = params["bonus_u"].astype(jnp.float32)  # (H, hd)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, h, n_chunks, chunk, head_size).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, nw))  # (N, B, H, c, hd)
+
+    def step(state, xs):
+        # state: (B, H, hd_k, hd_v)
+        rb, kb, vb, wb = (t.astype(jnp.float32) for t in xs)
+        c = rb.shape[2]
+        cum = jnp.cumsum(wb, axis=2)                       # (B,H,c,hd) log decay
+        cum_excl = cum - wb                                # decay up to t-1
+        # inter-chunk: state contribution decayed to each position
+        r_dec = rb * jnp.exp(cum_excl)
+        o_state = jnp.einsum("bhck,bhkv->bhcv", r_dec, state)
+        # intra-chunk: A[t,s] = exp(cum_excl[t] - cum[s]) per channel, s < t
+        kt = kb * jnp.exp(-cum)                            # (B,H,c,hd)
+        att = jnp.einsum("bhck,bhsk->bhcs", rb * jnp.exp(cum_excl), kt)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = att * mask[None, None]
+        o_intra = jnp.einsum("bhcs,bhsv->bhcv", att, vb)
+        # current token via bonus u:  o_cur_t = (r_t . (u * k_t)) v_t
+        o_cur = ((rb * kb * jnp.exp(u)[None, :, None, :]).sum(-1, keepdims=True)
+                 * vb)
+        out = o_state + o_intra + o_cur
+        # state update: S' = diag(exp(sum w)) S + sum_s exp(cum_last - cum_s) k_s v_s
+        total = cum[:, :, -1:, :]                          # (B,H,1,hd)
+        k_carry = kb * jnp.exp(total - cum)
+        s_new = state * jnp.exp(total.squeeze(2))[..., None] + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_carry, vb)
+        return s_new, out
+
+    state0 = jnp.zeros((b, h, head_size, head_size), jnp.float32)
+    _, outs = jax.lax.scan(step, state0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, head_size)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    return (out * g) @ params["w_o"].astype(x.dtype)
+
+
+def rwkv6_decode(params, x: Array, state: Array, shift: Array, *,
+                 head_size: int):
+    """One-token step. x: (B, 1, D); state: (B, H, hd, hd); shift: (B, D)."""
+    b, _, d = x.shape
+    h = d // head_size
+    xs = shift[:, None, :]
+    mix = params["mix"].astype(x.dtype)
+    xr = x * mix[0] + xs * (1 - mix[0])
+    xk = x * mix[1] + xs * (1 - mix[1])
+    xv = x * mix[2] + xs * (1 - mix[2])
+    xg = x * mix[3] + xs * (1 - mix[3])
+    xw = x * mix[4] + xs * (1 - mix[4])
+    r = (xr @ params["w_r"].astype(x.dtype)).reshape(b, h, head_size)
+    k = (xk @ params["w_k"].astype(x.dtype)).reshape(b, h, head_size)
+    v = (xv @ params["w_v"].astype(x.dtype)).reshape(b, h, head_size)
+    g = jax.nn.silu(xg @ params["w_g"].astype(x.dtype))
+    logw = (xw @ params["w_decay"].astype(x.dtype)
+            + params["decay_bias"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(jnp.clip(logw.astype(jnp.float32), -8.0, 2.0)))
+    w = w.reshape(b, h, head_size)
+    u = jnp.exp(params["bonus_u"].astype(jnp.float32))[None]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    o = jnp.einsum("bhk,bhkv->bhv", rf, state + u[..., None] * kv)
+    state = state * w[..., None] + kv
+    out = o.reshape(b, 1, d).astype(x.dtype) * g
+    y = out @ params["w_o"].astype(x.dtype)
+    return y, state, x[:, 0, :]

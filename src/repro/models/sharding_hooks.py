@@ -1,0 +1,29 @@
+"""Activation-sharding hook.
+
+Models call ``shard("logical_name", x)`` at block boundaries; by default it is
+the identity.  ``launch/sharding.py`` installs a mesh-aware implementation
+(``with use_sharder(fn): ...``) that maps logical activation names to
+``jax.lax.with_sharding_constraint`` specs.  Keeping the hook out of model
+code keeps model definitions mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def shard(name: str, x):
+    fn = getattr(_state, "sharder", None)
+    return x if fn is None else fn(name, x)
+
+
+@contextlib.contextmanager
+def use_sharder(fn):
+    prev = getattr(_state, "sharder", None)
+    _state.sharder = fn
+    try:
+        yield
+    finally:
+        _state.sharder = prev

@@ -1,0 +1,403 @@
+"""Decoder-only LM assembly for all non-enc-dec architectures.
+
+Layers are grouped as [unrolled prefix] + [scan over periods] + [unrolled
+tail] (models/config.py::scan_grouping); the scan body covers one period of
+the layer pattern and is rematerialized (jax.checkpoint) for training.
+
+Params are plain nested dicts; scanned groups carry leaves stacked along a
+leading (n_periods,) axis — vmap over per-period RNG keys builds them without
+host loops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, LayerKind, layer_kinds, scan_grouping
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import mamba as mamba_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers import rwkv6 as rwkv_mod
+from repro.models.layers.norm import (
+    rmsnorm_init, rmsnorm, layernorm_init, layernorm,
+)
+from repro.models.sharding_hooks import shard
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def _norm_init(cfg: ArchConfig, dtype):
+    return (rmsnorm_init(cfg.d_model, dtype) if cfg.norm == "rmsnorm"
+            else layernorm_init(cfg.d_model, dtype))
+
+
+def _norm(cfg: ArchConfig, params, x):
+    return (rmsnorm(params, x, cfg.norm_eps) if cfg.norm == "rmsnorm"
+            else layernorm(params, x, cfg.norm_eps))
+
+
+# --------------------------------------------------------------------------
+# per-layer params
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, kind: LayerKind):
+    kmix, kffn, kn1, kn2, kshared = jax.random.split(key, 5)
+    dtype = cfg.pdtype
+    p: dict = {"ln1": _norm_init(cfg, dtype), "ln2": _norm_init(cfg, dtype)}
+    if kind.mixer in ("attn", "swa"):
+        p["attn"] = attn_mod.init_attention(
+            kmix, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=dtype)
+    elif kind.mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(
+            kmix, cfg.d_model, cfg.mamba_d_state, cfg.mamba_d_conv,
+            cfg.mamba_expand, dtype=dtype)
+    elif kind.mixer == "rwkv":
+        p["rwkv"] = rwkv_mod.init_rwkv6(
+            kmix, cfg.d_model, cfg.rwkv_head_size, dtype=dtype)
+    if kind.ffn == "moe":
+        p["moe"] = moe_mod.init_moe(
+            kffn, cfg.d_model, kind.d_ff, cfg.num_experts, dtype=dtype)
+        if cfg.shared_expert:
+            p["shared_mlp"] = mlp_mod.init_mlp(
+                kshared, cfg.d_model, kind.d_ff, dtype=dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(
+            kffn, cfg.d_model, kind.d_ff,
+            gated=(cfg.act != "gelu" or cfg.norm == "rmsnorm"), dtype=dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    prefix, period, n_periods, tail = scan_grouping(cfg)
+    k_embed, k_head, k_pre, k_body, k_tail, k_fn = jax.random.split(key, 6)
+    dtype = cfg.pdtype
+    v = cfg.padded_vocab
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (v, cfg.d_model)) * 0.02
+                  ).astype(dtype),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, v)) /
+            jnp.sqrt(cfg.d_model)).astype(dtype)
+    if prefix:
+        params["prefix"] = [
+            _init_layer(k, cfg, kind)
+            for k, kind in zip(jax.random.split(k_pre, len(prefix)), prefix)
+        ]
+    if n_periods:
+        def one_period(k):
+            ks = jax.random.split(k, len(period))
+            return [_init_layer(ki, cfg, kind) for ki, kind in zip(ks, period)]
+        params["blocks"] = jax.vmap(one_period)(
+            jax.random.split(k_body, n_periods))
+    if tail:
+        params["tail"] = [
+            _init_layer(k, cfg, kind)
+            for k, kind in zip(jax.random.split(k_tail, len(tail)), tail)
+        ]
+    return params
+
+
+def param_specs(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the params (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _apply_mixer_fwd(p, x, cfg: ArchConfig, kind: LayerKind):
+    if kind.mixer in ("attn", "swa"):
+        window = cfg.window_size if kind.mixer == "swa" else None
+        return attn_mod.attention_forward(
+            p["attn"], x, n_kv=cfg.num_kv_heads, rope_theta=cfg.rope_theta,
+            causal=True, window=window, softcap=cfg.softcap or None,
+            chunk=cfg.attn_chunk, use_rope=cfg.use_rope)
+    if kind.mixer == "mamba":
+        return mamba_mod.mamba_forward(p["mamba"], x, chunk=cfg.scan_chunk)
+    if kind.mixer == "rwkv":
+        return rwkv_mod.rwkv6_forward(p["rwkv"], x,
+                                      head_size=cfg.rwkv_head_size,
+                                      chunk=cfg.scan_chunk)
+    raise ValueError(kind.mixer)
+
+
+def _apply_ffn_fwd(p, x, cfg: ArchConfig, kind: LayerKind):
+    if kind.ffn == "moe":
+        y, aux = moe_mod.moe_forward(
+            p["moe"], x, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor)
+        if cfg.shared_expert:
+            y = y + mlp_mod.mlp_forward(p["shared_mlp"], x, cfg.act)
+        return y, aux["load_balance_loss"] + 1e-3 * aux["router_z_loss"]
+    return mlp_mod.mlp_forward(p["mlp"], x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _apply_layer_fwd(p, x, cfg: ArchConfig, kind: LayerKind):
+    h = _norm(cfg, p["ln1"], x)
+    if kind.mixer in ("attn", "swa"):
+        # hooks for sequence-parallel attention (optimized variant resharding
+        # when num_heads doesn't divide the model axis); identity by default
+        h = shard("attn_in", h)
+        y = shard("attn_out", _apply_mixer_fwd(p, h, cfg, kind))
+    else:
+        y = _apply_mixer_fwd(p, h, cfg, kind)
+    x = x + shard("residual", y)
+    h = _norm(cfg, p["ln2"], x)
+    y, aux = _apply_ffn_fwd(p, h, cfg, kind)
+    return x + shard("residual", y), aux
+
+
+def backbone_forward(params, x: Array, cfg: ArchConfig, *,
+                     remat: bool = False):
+    """Embedded input -> final hidden states. x: (B, S, D) compute dtype."""
+    prefix, period, n_periods, tail = scan_grouping(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for p, kind in zip(params.get("prefix", []), prefix):
+        x, aux = _apply_layer_fwd(p, x, cfg, kind)
+        aux_total += aux
+
+    if n_periods:
+        def body(x, p_period):
+            aux_p = jnp.zeros((), jnp.float32)
+            for p, kind in zip(p_period, period):
+                x, aux = _apply_layer_fwd(p, x, cfg, kind)
+                aux_p += aux
+            return x, aux_p
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        aux_total += auxs.sum()
+
+    for p, kind in zip(params.get("tail", []), tail):
+        x, aux = _apply_layer_fwd(p, x, cfg, kind)
+        aux_total += aux
+    return _norm(cfg, params["final_norm"], x), aux_total
+
+
+def embed_tokens(params, tokens: Array, cfg: ArchConfig) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), cfg.cdtype)
+    return x
+
+
+def lm_logits(params, hidden: Array, cfg: ArchConfig) -> Array:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = hidden.astype(jnp.float32) @ head.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return shard("logits", logits)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean CE over positions with label >= 0 (mask = frontend positions)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *, remat: bool = True):
+    """batch: tokens (B,S), labels (B,S) [-1 = masked], optional
+    img_embed (B,P,D)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "img_embed" in batch:
+        img = batch["img_embed"].astype(cfg.cdtype)
+        x = jnp.concatenate([img, x], axis=1)
+        pad = -jnp.ones(img.shape[:2], labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    x = shard("hidden", x)
+    hidden, aux = backbone_forward(params, x, cfg, remat=remat)
+    logits = lm_logits(params, hidden, cfg)
+    loss = cross_entropy(logits, labels)
+    return loss + 1e-2 * aux, {"ce_loss": loss, "aux_loss": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (serve path)
+# --------------------------------------------------------------------------
+
+def _cache_entry(cfg: ArchConfig, kind: LayerKind, batch: int, max_seq: int):
+    hd, kv = cfg.head_dim, cfg.num_kv_heads
+    dt = cfg.cdtype
+    if kind.mixer == "attn":
+        return {"k": jnp.zeros((batch, max_seq, kv, hd), dt),
+                "v": jnp.zeros((batch, max_seq, kv, hd), dt)}
+    if kind.mixer == "swa":
+        w = min(cfg.window_size, max_seq)
+        return {"k": jnp.zeros((batch, w, kv, hd), dt),
+                "v": jnp.zeros((batch, w, kv, hd), dt),
+                "slot_pos": -jnp.ones((w,), jnp.int32)}
+    if kind.mixer == "mamba":
+        return {"ssm": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner),
+                                  dt)}
+    if kind.mixer == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_size
+        return {"state": jnp.zeros((batch, h, cfg.rwkv_head_size,
+                                    cfg.rwkv_head_size), jnp.float32),
+                "shift": jnp.zeros((batch, cfg.d_model), dt)}
+    raise ValueError(kind.mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    prefix, period, n_periods, tail = scan_grouping(cfg)
+    cache: dict = {}
+    if prefix:
+        cache["prefix"] = [_cache_entry(cfg, k, batch, max_seq) for k in prefix]
+    if n_periods:
+        def one(_):
+            return [_cache_entry(cfg, k, batch, max_seq) for k in period]
+        cache["blocks"] = jax.vmap(one)(jnp.arange(n_periods))
+    if tail:
+        cache["tail"] = [_cache_entry(cfg, k, batch, max_seq) for k in tail]
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def _decode_attn_ring(p, x, cache, pos, cfg: ArchConfig):
+    """SWA decode against a ring buffer of window slots."""
+    b, _, d = x.shape
+    w = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["attn"]["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["attn"]["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["attn"]["wv"].astype(x.dtype))
+    if "bq" in p["attn"]:
+        q = q + p["attn"]["bq"].astype(x.dtype)
+        k = k + p["attn"]["bk"].astype(x.dtype)
+        v = v + p["attn"]["bv"].astype(x.dtype)
+    if cfg.use_rope:
+        from repro.models.layers.rope import apply_rope
+        q = apply_rope(q, jnp.full((1, 1), pos, jnp.int32), cfg.rope_theta)
+        k = apply_rope(k, jnp.full((1, 1), pos, jnp.int32), cfg.rope_theta)
+    slot = pos % w
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0)
+
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    qh = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd**-0.5
+    if cfg.softcap:
+        s = cfg.softcap * jnp.tanh(s / cfg.softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos) & \
+            (slot_pos > pos - cfg.window_size)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+
+
+def _apply_layer_decode(p, x, cache, pos, cfg: ArchConfig, kind: LayerKind):
+    h = _norm(cfg, p["ln1"], x)
+    if kind.mixer == "attn":
+        y, kc, vc = attn_mod.attention_decode(
+            p["attn"], h, cache["k"], cache["v"], pos,
+            n_kv=cfg.num_kv_heads, rope_theta=cfg.rope_theta,
+            window=None, softcap=cfg.softcap or None, use_rope=cfg.use_rope)
+        cache = {"k": kc, "v": vc}
+    elif kind.mixer == "swa":
+        y, cache = _decode_attn_ring(p, h, cache, pos, cfg)
+    elif kind.mixer == "mamba":
+        y, ssm, conv = mamba_mod.mamba_decode(
+            p["mamba"], h, cache["ssm"], cache["conv"])
+        cache = {"ssm": ssm, "conv": conv}
+    elif kind.mixer == "rwkv":
+        y, state, shiftv = rwkv_mod.rwkv6_decode(
+            p["rwkv"], h, cache["state"], cache["shift"],
+            head_size=cfg.rwkv_head_size)
+        cache = {"state": state, "shift": shiftv}
+    x = x + y
+    h = _norm(cfg, p["ln2"], x)
+    if kind.ffn == "moe":
+        y, _ = moe_mod.moe_forward(p["moe"], h, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor)
+        if cfg.shared_expert:
+            y = y + mlp_mod.mlp_forward(p["shared_mlp"], h, cfg.act)
+    else:
+        y = mlp_mod.mlp_forward(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def decode_step(params, cache, token: Array, pos: Array, cfg: ArchConfig):
+    """One-token decode. token: (B, 1) int32; pos: scalar int32 (shared —
+    batched serving uses per-slot position via vmap upstream if needed).
+    Returns (logits (B, V), new_cache)."""
+    prefix, period, n_periods, tail = scan_grouping(cfg)
+    x = embed_tokens(params, token, cfg)
+    x = shard("decode_hidden", x)
+    new_cache: dict = {}
+    if prefix:
+        outs = []
+        for p, c, kind in zip(params["prefix"], cache["prefix"], prefix):
+            x, c2 = _apply_layer_decode(p, x, c, pos, cfg, kind)
+            outs.append(c2)
+        new_cache["prefix"] = outs
+
+    if n_periods:
+        def body(x, xs):
+            p_period, c_period = xs
+            c_out = []
+            for p, c, kind in zip(p_period, c_period, period):
+                x, c2 = _apply_layer_decode(p, x, c, pos, cfg, kind)
+                c_out.append(c2)
+            return x, c_out
+        x, blocks_cache = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = blocks_cache
+
+    if tail:
+        outs = []
+        for p, c, kind in zip(params["tail"], cache["tail"], tail):
+            x, c2 = _apply_layer_decode(p, x, c, pos, cfg, kind)
+            outs.append(c2)
+        new_cache["tail"] = outs
+
+    hidden = _norm(cfg, params["final_norm"], x)
+    logits = lm_logits(params, hidden, cfg)[:, 0, :]
+    return logits, new_cache
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, max_seq: int | None = None):
+    """Full-sequence forward returning (last-token logits, populated cache).
+
+    Used by serve examples at smoke scale; for the dry-run, prefill_32k
+    lowers the forward (logits over the full sequence), which dominates cost.
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.frontend == "vision" and "img_embed" in batch:
+        x = jnp.concatenate([batch["img_embed"].astype(cfg.cdtype), x], axis=1)
+    x = shard("hidden", x)
+    hidden, _ = backbone_forward(params, x, cfg, remat=False)
+    logits = lm_logits(params, hidden, cfg)
+    return logits

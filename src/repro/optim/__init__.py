@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptState, adamw_init, adamw_update, global_norm, clip_by_global_norm,
+)
+from repro.optim.schedules import warmup_cosine, constant  # noqa: F401

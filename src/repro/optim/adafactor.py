@@ -1,0 +1,82 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moment, no momentum.
+
+Memory-critical for kimi-k2 (1T params): f32 AdamW needs ~12 TB of optimizer
++ master state; Adafactor's row/col factors are O(n+m) per matrix.  With bf16
+params this brings the 1T-param train step inside a 256-chip v5e pod
+(DESIGN.md §10).  Matrices (and the trailing two dims of stacked/3D+ leaves)
+are factored; vectors keep a full second moment.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class FactoredState(NamedTuple):
+    step: jax.Array
+    vr: PyTree   # row factors (or full v for <2D leaves)
+    vc: PyTree   # col factors (None placeholder for <2D leaves)
+
+
+def _is_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def adafactor_init(params: PyTree) -> FactoredState:
+    def vr_init(p):
+        if _is_factored(p.shape):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _is_factored(p.shape):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return FactoredState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr_init, params),
+        vc=jax.tree.map(vc_init, params),
+    )
+
+
+def adafactor_update(grads: PyTree, state: FactoredState, params: PyTree, *,
+                     lr, eps: float = 1e-30, clip_threshold: float = 1.0,
+                     decay_exponent: float = 0.8,
+                     weight_decay: float = 0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay_exponent)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _is_factored(p.shape):
+            vr_new = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            # rank-1 reconstruction of the second moment
+            denom = vr_new[..., None] * vc_new[..., None, :] / jnp.maximum(
+                vr_new.mean(axis=-1)[..., None, None], eps)
+            u = g / jnp.sqrt(jnp.maximum(denom, eps))
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * g2
+            vc_new = vc
+            u = g / jnp.sqrt(jnp.maximum(vr_new, eps))
+        # update clipping: rms(u) <= clip_threshold
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * u
+        if weight_decay:
+            new_p = new_p - lr * weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), vr_new, vc_new
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    is3 = lambda x: isinstance(x, tuple)
+    new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=is3)
+    new_vr = jax.tree.map(lambda t3: t3[1], out, is_leaf=is3)
+    new_vc = jax.tree.map(lambda t3: t3[2], out, is_leaf=is3)
+    return new_params, FactoredState(step, new_vr, new_vc), {}

@@ -1,0 +1,71 @@
+"""Native AdamW (no optax in this container) with pytree states.
+
+Moments inherit each parameter's sharding automatically under pjit (they are
+elementwise functions of the params), so FSDP shards optimizer state for free.
+Master params stay f32; the model may cast to bf16 at use sites.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array   # ()
+    mu: PyTree        # first moment
+    nu: PyTree        # second moment
+
+
+def adamw_init(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads: PyTree, state: OptState, params: PyTree, *,
+                 lr: jax.Array | float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float | None = 1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1.0 - b1) * g
+        nu = b2 * nu + (1.0 - b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t3: t3[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t3: t3[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t3: t3[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_mu, new_nu), {"grad_norm": gnorm}

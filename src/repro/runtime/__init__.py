@@ -1,0 +1,3 @@
+from repro.runtime.fault import (  # noqa: F401
+    PreemptionGuard, StepWatchdog, ElasticPlan,
+)

@@ -1,0 +1,111 @@
+"""Fault-tolerance runtime: preemption, stragglers, elastic re-mesh.
+
+At 1000+ node scale the failure model is: (a) SIGTERM preemptions with a
+grace window, (b) slow/hung hosts (stragglers), (c) permanent node loss that
+requires restarting on a different device count.  The pieces here are
+host-side and framework-agnostic; the distributed decisions they trigger
+(checkpoint now, skip ahead, re-lower) live in launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from collections import deque
+from typing import Callable
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> cooperative shutdown flag.
+
+    The train loop polls ``should_stop`` each step and performs a final
+    synchronous checkpoint inside the grace window instead of dying mid-step.
+    """
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._stop = threading.Event()
+        self._prev = {}
+        for sig in signals:
+            try:
+                self._prev[sig] = signal.signal(sig, self._handler)
+            except ValueError:  # not the main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._stop.set()
+
+    def request_stop(self):
+        self._stop.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+
+class StepWatchdog:
+    """Step-time tracker with straggler detection.
+
+    Keeps a rolling window of step durations; a step slower than
+    ``threshold x median`` is flagged.  On real pods the flag feeds the
+    controller, which can (1) exclude the slow host from the next data
+    assignment (we reshard the batch: see ElasticPlan) or (2) trigger an
+    early checkpoint.  Here it also powers the straggler-mitigation test.
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 3.0,
+                 on_straggler: Callable[[int, float], None] | None = None):
+        self.durations: deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.flags: list[tuple[int, float]] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        if len(self.durations) >= 8:
+            med = sorted(self.durations)[len(self.durations) // 2]
+            if dt > self.threshold * med:
+                self.flags.append((step, dt))
+                if self.on_straggler:
+                    self.on_straggler(step, dt)
+        self.durations.append(dt)
+        return dt
+
+    @property
+    def median(self) -> float | None:
+        if not self.durations:
+            return None
+        return sorted(self.durations)[len(self.durations) // 2]
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Describes how to resume on a different device count.
+
+    The checkpoint format is sharding-agnostic (checkpoint/store.py), so
+    elasticity is: build the new mesh, recompute shardings from the SAME
+    logical rules, restore, and fast-forward the data stream (stateless
+    by-step indexing makes that a no-op).  ``batch_policy`` decides whether
+    the global batch is preserved (grad-accum increases) or scaled down.
+    """
+
+    old_devices: int
+    new_devices: int
+    batch_policy: str = "preserve_global"  # or "scale_with_devices"
+
+    def microbatch_factor(self, old_accum: int) -> int:
+        if self.batch_policy == "scale_with_devices":
+            return old_accum
+        # preserve global batch: accumulate more on fewer devices
+        assert self.old_devices % self.new_devices == 0 or \
+            self.new_devices % self.old_devices == 0, \
+            "elastic resize must be by an integer factor"
+        if self.new_devices < self.old_devices:
+            return old_accum * (self.old_devices // self.new_devices)
+        return max(1, old_accum // (self.new_devices // self.old_devices))

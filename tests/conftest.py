@@ -1,0 +1,6 @@
+import os
+
+# Tests run single-device CPU (the dry-run sets its own 512-device flag in a
+# subprocess; per the brief we do NOT set xla_force_host_platform_device_count
+# globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,93 @@
+"""Pallas kernel sweeps: shapes x dtypes x kernel families vs jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+SHAPES = [(64, 16, 8), (100, 37, 24), (513, 129, 16), (256, 256, 256),
+          (1000, 7, 96)]
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+@pytest.mark.parametrize("p", [2, 1])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_gram_sweep(n, m, d, p, dtype):
+    rng = np.random.default_rng(hash((n, m, d, p)) % 2**32)
+    x = rng.normal(size=(n, d)).astype(dtype)
+    y = rng.normal(size=(m, d)).astype(dtype)
+    wx = rng.uniform(0.5, 3, n).astype(np.float32)
+    wy = rng.uniform(0.5, 3, m).astype(np.float32)
+    got = np.asarray(ops.gram(x, y, sigma=2.5, p=p, wx=wx, wy=wy))
+    want = np.asarray(ref.gram_ref(jnp.asarray(x), jnp.asarray(y), 2.5, p,
+                                   jnp.asarray(wx), jnp.asarray(wy)))
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+def test_gram_unweighted(n, m, d):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(m, d)).astype(np.float32)
+    got = np.asarray(ops.gram(x, y, sigma=1.5))
+    want = np.asarray(ref.gram_ref(jnp.asarray(x), jnp.asarray(y), 1.5, 2))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_weighted_gram_is_algorithm1_ktilde():
+    """ops.weighted_gram == W K^C W of Algorithm 1 (vs core implementation)."""
+    from repro.core.kernels_math import weighted_gram as core_wg, gaussian
+    rng = np.random.default_rng(3)
+    c = rng.normal(size=(57, 12)).astype(np.float32)
+    w = rng.uniform(1, 9, 57).astype(np.float32)
+    got = np.asarray(ops.weighted_gram(c, w, sigma=2.0))
+    want = np.asarray(core_wg(gaussian(2.0), jnp.asarray(c), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+def test_shadow_assign_sweep(n, m, d):
+    rng = np.random.default_rng(hash((n, m)) % 2**32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(m, d)).astype(np.float32)
+    idx, d2 = ops.shadow_assign(x, c, m)
+    idx_r, d2_r = ref.shadow_assign_ref(jnp.asarray(x), jnp.asarray(c), m)
+    assert (np.asarray(idx) == np.asarray(idx_r)).all()
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_shadow_assign_padding_mask():
+    """Padded (invalid) centers must never win the argmin."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(100, 8)).astype(np.float32)
+    c = np.concatenate([rng.normal(size=(5, 8)),
+                        np.zeros((10, 8))]).astype(np.float32)
+    idx, _ = ops.shadow_assign(x, c, m_valid=5)
+    assert (np.asarray(idx) < 5).all()
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+@pytest.mark.parametrize("r", [1, 5, 8])
+def test_kpca_project_sweep(n, m, d, r):
+    rng = np.random.default_rng(hash((n, m, r)) % 2**32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(m, d)).astype(np.float32)
+    a = rng.normal(size=(m, r)).astype(np.float32)
+    got = np.asarray(ops.kpca_project(x, c, a, sigma=2.0))
+    want = np.asarray(ref.kpca_project_ref(jnp.asarray(x), jnp.asarray(c),
+                                           jnp.asarray(a), 2.0, 2))
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
+
+
+def test_block_size_selection_respects_vmem_budget():
+    from repro.kernels.ops import pick_gram_blocks
+    for d in (8, 64, 512, 4096, 8192):
+        bn, bm, bk = pick_gram_blocks(d)
+        assert (2 * bn * bk + bn * bm) * 4 <= 8 * 1024 * 1024
+        assert bn % 128 == 0 and bm % 128 == 0 and bk <= max(d, 128)
+        # K-chunking must preserve the big output tile even at large d
+        assert bn == 512, (d, bn)

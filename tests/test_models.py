@@ -1,0 +1,200 @@
+"""Per-arch smoke tests + decode/forward consistency.
+
+The decode-equivalence test is the strongest model correctness check: a
+token-by-token decode with caches (KV, ring-SWA, Mamba state, RWKV state)
+must reproduce the teacher-forced forward logits.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+from repro.models.api import ShapeSpec
+
+SMOKE_TRAIN = ShapeSpec("smoke_train", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in api.make_host_batch(cfg, SMOKE_TRAIN).items()}
+    loss, metrics = api.loss_fn(params, batch, cfg, remat=False)
+    assert np.isfinite(float(loss))
+    assert 0 < float(loss) < 20
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_grad_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in api.make_host_batch(cfg, SMOKE_TRAIN).items()}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: api.loss_fn(p, batch, cfg, remat=True), has_aux=True)(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert np.isfinite(np.asarray(g)).all(), path
+
+
+DECODE_ARCHS = ["yi_9b", "gemma2_9b", "gemma3_4b", "mixtral_8x7b",
+                "rwkv6_1b6", "jamba_52b", "qwen2_72b", "kimi_k2",
+                "whisper_base"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_teacher_forced_forward(arch):
+    """Token-by-token decode must reproduce the full-sequence logits.
+
+    Run in f32: the algorithmic check must not be polluted by bf16
+    accumulation-order noise (verified: bf16 deviates up to ~0.7 on random
+    init; f32 agrees to ~1e-5)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              compute_dtype="float32")
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    T = 12
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, T)), jnp.int32)
+
+    if cfg.is_encdec():
+        audio = jnp.asarray(rng.normal(size=(2, cfg.encoder_seq, cfg.d_model)),
+                            jnp.float32)
+        batch = {"audio_embed": audio, "tokens": tokens}
+        full = api.prefill_logits(params, batch, cfg)  # (2, T, V)
+        from repro.models import encdec
+        cache = encdec.init_cache(cfg, 2, T)
+        # populate cross K/V from the encoder output
+        enc = encdec.encode(params, audio, cfg)
+
+        def xkv(p):
+            k = jnp.einsum("bsd,dhk->bshk", enc,
+                           p["cross_attn"]["wk"].astype(enc.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", enc,
+                           p["cross_attn"]["wv"].astype(enc.dtype))
+            return k, v
+        ks, vs = jax.vmap(xkv, in_axes=(0,))(params["dec_blocks"])
+        cache["dec"]["xk"] = ks   # (L, B, enc_seq, KV, hd)
+        cache["dec"]["xv"] = vs
+    else:
+        batch = {"tokens": tokens}
+        full = api.prefill_logits(params, batch, cfg)
+        cache = api.init_cache(cfg, 2, T)
+
+    step = jax.jit(lambda p, c, t, pos: api.decode_step(p, c, t, pos, cfg))
+    got = []
+    for t in range(T):
+        logits, cache = step(params, cache, tokens[:, t:t + 1], jnp.int32(t))
+        got.append(np.asarray(logits))
+    got = np.stack(got, axis=1)  # (2, T, V)
+    want = np.asarray(full)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1 and near-uniform routing, few tokens drop."""
+    from repro.models.layers.moe import init_moe, moe_forward
+    key = jax.random.PRNGKey(0)
+    p = init_moe(key, 32, 64, n_experts=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y, aux = moe_forward(p, x, top_k=2, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["load_balance_loss"]) > 0.5  # ~1 for uniform routing
+
+
+def test_moe_matches_dense_reference_when_capacity_ample():
+    """Sort-based dispatch == per-token dense gather when nothing drops."""
+    from repro.models.layers.moe import init_moe, moe_forward
+    key = jax.random.PRNGKey(2)
+    d, f, e, k = 16, 32, 4, 2
+    p = init_moe(key, d, f, n_experts=e)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, d))
+    y, _ = moe_forward(p, x, top_k=k, capacity_factor=8.0)
+
+    # dense reference: every token through its top-k experts via direct gather
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gw, ge = jax.lax.top_k(probs, k)
+    gw = gw / gw.sum(-1, keepdims=True)
+    outs = []
+    for t in range(xf.shape[0]):
+        acc = jnp.zeros((d,), x.dtype)
+        for j in range(k):
+            eidx = int(ge[t, j])
+            h = xf[t] @ p["w_in"][eidx]
+            g = jax.nn.silu(xf[t] @ p["w_gate"][eidx]) * h
+            acc = acc + gw[t, j].astype(x.dtype) * (g @ p["w_out"][eidx])
+        outs.append(acc)
+    want = jnp.stack(outs).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv_chunked_equals_recurrence():
+    """Chunked-parallel RWKV6 forward == naive O(T) recurrence oracle."""
+    from repro.models.layers.rwkv6 import init_rwkv6, rwkv6_forward, \
+        rwkv6_decode
+    d, hs = 32, 8
+    p = init_rwkv6(jax.random.PRNGKey(0), d, hs)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d)) * 0.5
+    full = rwkv6_forward(p, x, head_size=hs, chunk=4)
+    # decode-step recurrence oracle
+    state = jnp.zeros((2, d // hs, hs, hs), jnp.float32)
+    shift = jnp.zeros((2, d), x.dtype)
+    outs = []
+    for t in range(16):
+        y, state, shift = rwkv6_decode(p, x[:, t:t + 1], state, shift,
+                                       head_size=hs)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_mamba_chunked_equals_recurrence():
+    from repro.models.layers.mamba import init_mamba, mamba_forward, \
+        mamba_decode
+    d = 32
+    p = init_mamba(jax.random.PRNGKey(0), d, d_state=4, d_conv=4, expand=2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d)) * 0.5
+    full = mamba_forward(p, x, chunk=4)
+    ssm = jnp.zeros((2, 2 * d, 4), jnp.float32)
+    conv = jnp.zeros((2, 3, 2 * d), x.dtype)
+    outs = []
+    for t in range(12):
+        y, ssm, conv = mamba_decode(p, x[:, t:t + 1], ssm, conv)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_flash_attention_equals_naive():
+    from repro.models.layers.attention import flash_attention
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 16, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, 16, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, 16, 2, 8))
+    for window, softcap in [(None, None), (4, None), (None, 5.0), (8, 3.0)]:
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              softcap=softcap, chunk=4)
+        # naive reference
+        g = 2
+        qh = q.reshape(2, 16, 2, g, 8)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qh, k) / np.sqrt(8)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = jnp.arange(16)[:, None]
+        kpos = jnp.arange(16)[None, :]
+        mask = qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        pr = jax.nn.softmax(s, axis=-1)
+        want = jnp.einsum("bkgqs,bskd->bqkgd", pr, v).reshape(2, 16, 4, 8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)

@@ -1,0 +1,106 @@
+"""RSKPCA (Algorithm 1) correctness + baselines."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    gaussian, laplacian, shadow_rsde, fit_rskpca, fit_kpca,
+    fit_subsampled_kpca, fit_nystrom, fit_weighted_nystrom, fit,
+    embedding_alignment_error, make_rsde,
+    reduced_laplacian_eigenmaps, reduced_diffusion_maps,
+)
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, sigma = make_dataset("german", seed=0, n=400)
+    return x, y, sigma
+
+
+def test_limit_equals_kpca(data):
+    """ell -> inf: every point its own center, RSKPCA == KPCA exactly."""
+    x, _, sigma = data
+    x = x[:150]
+    ker = gaussian(sigma)
+    rsde = shadow_rsde(x, ker, ell=1e9)
+    assert rsde.m == len(x) and (rsde.weights == 1).all()
+    rs = fit_rskpca(rsde, ker, rank=5)
+    kp = fit_kpca(x, ker, rank=5)
+    np.testing.assert_allclose(rs.eigvals, kp.eigvals, rtol=1e-4)
+    q = x[:40]
+    err = embedding_alignment_error(kp.transform(q), rs.transform(q))
+    assert err <= 1e-3 * np.linalg.norm(kp.transform(q))
+
+
+def test_rskpca_approaches_kpca_as_ell_grows(data):
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    kp = fit_kpca(x, ker, rank=5)
+    ref = kp.transform(x[:100])
+    errs = []
+    for ell in (2.0, 4.0, 8.0, 16.0):
+        mdl = fit_rskpca(shadow_rsde(x, ker, ell), ker, rank=5)
+        errs.append(embedding_alignment_error(ref, mdl.transform(x[:100])))
+    assert errs[-1] < errs[0]  # error shrinks with finer cover
+    assert errs[-1] < 0.1 * np.linalg.norm(ref)
+
+
+def test_weights_matter_rskpca_beats_uniform(data):
+    """Paper §6: subsampled KPCA performs worse than any weighted method."""
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    kp = fit_kpca(x, ker, rank=5)
+    ref = kp.transform(x[:100])
+    errs_sh, errs_un = [], []
+    for seed in range(3):
+        rsde = shadow_rsde(x, ker, 3.5)
+        sh = fit_rskpca(rsde, ker, rank=5)
+        un = fit_subsampled_kpca(x, ker, rank=5, m=rsde.m, seed=seed)
+        errs_sh.append(embedding_alignment_error(ref, sh.transform(x[:100])))
+        errs_un.append(embedding_alignment_error(ref, un.transform(x[:100])))
+    assert np.mean(errs_sh) < np.mean(errs_un)
+
+
+def test_nystrom_variants(data):
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    kp = fit_kpca(x, ker, rank=5)
+    ref = kp.transform(x[:80])
+    ny = fit_nystrom(x, ker, rank=5, m=80)
+    wy = fit_weighted_nystrom(x, ker, rank=5, m=80)
+    for mdl, max_rel in ((ny, 0.8), (wy, 0.8)):
+        err = embedding_alignment_error(ref, mdl.transform(x[:80]))
+        assert err < max_rel * np.linalg.norm(ref), mdl.method
+    # storage asymmetry (paper Table 2): Nystrom keeps all n, RSKPCA keeps m
+    assert ny.centers.shape[0] == len(x)
+    assert wy.centers.shape[0] == 80
+
+
+def test_front_door_and_schemes(data):
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    for method, kw in [("kpca", {}), ("shadow", dict(ell=4.0)),
+                       ("uniform", dict(m=40)), ("kmeans", dict(m=40)),
+                       ("paring", dict(m=40)), ("herding", dict(m=40))]:
+        mdl = fit(x[:200], ker, 4, method=method, **kw)
+        z = mdl.transform(x[:10])
+        assert z.shape == (10, 4) and np.isfinite(z).all(), method
+
+
+def test_laplacian_kernel_works(data):
+    x, _, sigma = data
+    ker = laplacian(sigma)
+    mdl = fit(x[:200], ker, 4, method="shadow", ell=4.0)
+    assert np.isfinite(mdl.transform(x[:10])).all()
+
+
+def test_kmla_reduced_embeddings(data):
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    rsde = shadow_rsde(x[:300], ker, 4.0)
+    le = reduced_laplacian_eigenmaps(rsde, ker, rank=3)
+    dm = reduced_diffusion_maps(rsde, ker, rank=3)
+    for mdl in (le, dm):
+        assert mdl.embedding.shape == (rsde.m, 3)
+        assert np.isfinite(mdl.embedding).all()
+        assert (mdl.eigvals <= 1.0 + 1e-5).all()  # normalized operators

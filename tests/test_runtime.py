@@ -1,0 +1,36 @@
+"""Fault-tolerance runtime: watchdog, preemption, elastic plan."""
+import time
+
+from repro.runtime import PreemptionGuard, StepWatchdog, ElasticPlan
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(window=16, threshold=3.0)
+    for step in range(10):
+        wd.start()
+        time.sleep(0.002)
+        wd.stop(step)
+    wd.start()
+    time.sleep(0.05)  # 25x median — a straggler step
+    wd.stop(10)
+    assert wd.flags and wd.flags[-1][0] == 10
+
+
+def test_preemption_guard_cooperative_stop():
+    g = PreemptionGuard(signals=())
+    assert not g.should_stop
+    g.request_stop()
+    assert g.should_stop
+
+
+def test_elastic_plan_preserves_global_batch():
+    plan = ElasticPlan(old_devices=16, new_devices=8)
+    assert plan.microbatch_factor(4) == 8   # half the devices -> 2x accum
+    plan_up = ElasticPlan(old_devices=8, new_devices=16)
+    assert plan_up.microbatch_factor(4) == 2
+
+
+def test_elastic_plan_scale_policy():
+    plan = ElasticPlan(old_devices=16, new_devices=8,
+                       batch_policy="scale_with_devices")
+    assert plan.microbatch_factor(4) == 4  # accum unchanged; batch shrinks

@@ -1,0 +1,105 @@
+"""Algorithm 2 (shadow selection): oracle equivalence + invariant properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import shadow_select_np, shadow_select_host, gaussian
+from repro.core.shadow import two_level_merge
+
+import jax.numpy as jnp
+
+
+def _data(n, d, seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0, 1, (max(2, n // 20), d))
+    idx = rng.integers(0, centers.shape[0], n)
+    return (centers[idx] + 0.05 * rng.normal(size=(n, d))).astype(np.float32)
+
+
+def test_jax_matches_numpy_oracle():
+    x = _data(500, 8, 0)
+    for eps in (0.05, 0.1, 0.3, 1.0):
+        c_np, w_np, a_np = shadow_select_np(x, eps)
+        c_j, w_j, a_j, m = shadow_select_host(x, eps)
+        assert m == len(c_np)
+        np.testing.assert_allclose(c_j, c_np, atol=1e-6)
+        np.testing.assert_allclose(w_j, w_np)
+        assert (a_j == a_np).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(20, 300), d=st.integers(1, 16),
+       eps=st.floats(0.01, 2.0), seed=st.integers(0, 10**6))
+def test_shadow_invariants(n, d, eps, seed):
+    x = _data(n, d, seed)
+    c, w, a, m = shadow_select_host(x, eps)
+    # partition: weights sum to n; every point assigned
+    assert w.sum() == n
+    assert (a >= 0).all() and (a < m).all()
+    # coverage: every point strictly within eps of its center
+    dist = np.linalg.norm(x - c[a], axis=1)
+    assert (dist < eps + 1e-5).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(20, 200), d=st.integers(1, 8), seed=st.integers(0, 10**6))
+def test_center_separation_and_monotonicity(n, d, seed):
+    x = _data(n, d, seed)
+    prev_m = None
+    for eps in (0.05, 0.1, 0.2, 0.4, 0.8):
+        c, w, a, m = shadow_select_host(x, eps)
+        if m > 1:
+            d2 = ((c[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+            np.fill_diagonal(d2, np.inf)
+            assert np.sqrt(d2.min()) >= eps - 1e-5  # greedy separation
+        if prev_m is not None:
+            assert m <= prev_m  # m non-increasing in eps
+        prev_m = m
+
+
+def test_permutation_changes_centers_but_keeps_invariants():
+    x = _data(300, 6, 3)
+    eps = 0.15
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(x))
+    c1, w1, _, m1 = shadow_select_host(x, eps)
+    c2, w2, _, m2 = shadow_select_host(x[perm], eps)
+    # order-dependent (paper Algorithm 2 takes the *first* element)...
+    assert w1.sum() == w2.sum() == len(x)
+    # ...but both are eps-covers with separated centers
+    for c, m in ((c1, m1), (c2, m2)):
+        d2 = ((c[:, None] - c[None]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        if m > 1:
+            assert np.sqrt(d2.min()) >= eps - 1e-5
+
+
+def test_two_level_merge_preserves_weight_and_cover():
+    x = _data(400, 5, 7)
+    eps = 0.2
+    # simulate 4 shards
+    shards = np.split(x, 4)
+    cs, ws = [], []
+    for s in shards:
+        c, w, _, m = shadow_select_host(s, eps)
+        cs.append(c)
+        ws.append(w)
+    all_c = jnp.asarray(np.concatenate(cs))
+    all_w = jnp.asarray(np.concatenate(ws), jnp.float32)
+    out_c, out_w, m = two_level_merge(all_c, all_w, jnp.float32(eps),
+                                      max_centers=len(all_c))
+    m = int(m)
+    assert float(out_w[:m].sum()) == len(x)
+    # 2-eps cover (DESIGN.md two-level bound)
+    d = np.linalg.norm(x[:, None] - np.asarray(out_c[:m])[None], axis=2).min(1)
+    assert (d < 2 * eps + 1e-5).all()
+
+
+def test_max_centers_overflow_guard():
+    x = _data(100, 4, 11)
+    c, w, a, m = (None,) * 4
+    import jax
+    from repro.core.shadow import shadow_select
+    c, w, a, m = jax.jit(
+        lambda x: shadow_select(x, 1e-9, max_centers=10))(jnp.asarray(x))
+    assert int(m) == 10 and float(w.sum()) == 100  # absorbed remainder
