@@ -1,0 +1,15 @@
+PYTHONPATH := src
+
+.PHONY: test bench bench-smoke
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# full paper-protocol benchmark sweep (slow)
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+# <60s perf smoke: seed-vs-current RSKPCA fit/transform at n in {2k,8k,32k};
+# refreshes BENCH_rskpca.json so every PR leaves a perf trajectory point
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke

@@ -1,6 +1,12 @@
 """Beyond-paper §Perf: scaling the paper's own pipeline (ShDE + RSKPCA).
 
-Two measurable-on-CPU optimizations of the paper's technique:
+The headline benchmark (``bench_fit``, also the ``--smoke`` target) compares
+the SEED fit/transform path — sequential Algorithm 2, dense Gram, full eigh —
+against the current default pipeline — blocked selection, fused Pallas
+kernels, top-r LOBPCG — at n in {2k, 8k, 32k}, and writes the results to
+``BENCH_rskpca.json`` so successive PRs accumulate a perf trajectory.
+
+Two further measurable-on-CPU optimizations of the paper's technique:
 
   P1. two-level (distributed) shadow selection vs the paper's sequential
       Algorithm 2 — wall-clock speedup at growing n (8 host devices stand in
@@ -15,11 +21,100 @@ device per the brief).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
+import time
 
 from benchmarks.common import emit
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_rskpca.json")
+
+
+def _seed_fit(x, ker, rank, ell):
+    """The seed PR's fit path, replicated verbatim for the perf baseline:
+    sequential selection + dense Gram + full O(m^3) eigh."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import shadow_select_host
+    from repro.core.kernels_math import gram_matrix_dense
+
+    c, w, _, m = shadow_select_host(x, ker.epsilon(ell))
+    cj = jnp.asarray(c, jnp.float32)
+    sw = jnp.sqrt(jnp.asarray(w, jnp.float32))
+    kt = gram_matrix_dense(ker, cj, cj) * sw[:, None] * sw[None, :] / len(x)
+    lam, v = jnp.linalg.eigh(kt)
+    lam = jnp.maximum(lam[::-1][:rank], 1e-12)
+    proj = (sw[:, None] * v[:, ::-1][:, :rank]) / jnp.sqrt(lam)[None, :] \
+        / np.sqrt(len(x))
+    return np.asarray(c), np.asarray(proj)
+
+
+def _seed_transform(ker, centers, proj, q):
+    """Seed transform: dense q x m Gram materialized, then the matmul."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.kernels_math import gram_matrix_dense
+
+    k_qc = gram_matrix_dense(ker, jnp.asarray(q, jnp.float32),
+                             jnp.asarray(centers))
+    return np.asarray(k_qc @ jnp.asarray(proj))
+
+
+def bench_fit(fast: bool = True):
+    """fit + transform wall-clock, seed path vs current default, ->JSON.
+
+    ``fast`` (the --smoke / default mode) takes a single timed run per
+    point; --full medians over 3 runs of the same n grid.
+    """
+    import numpy as np
+    from repro.core import gaussian, fit
+    from repro.data import make_dataset
+
+    rank, ell = 8, 4.0
+    reps = 1 if fast else 3  # --full medians over 3 timed runs per point
+
+    def timed(fn):
+        fn()                                               # compile warmup
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times)), out
+
+    rows = []
+    for n in (2048, 8192, 32768):
+        x, _, sigma = make_dataset("pendigits", seed=0, n=n)
+        ker = gaussian(sigma)
+
+        t_fit_seed, (centers, proj) = timed(
+            lambda: _seed_fit(x, ker, rank, ell))
+        t_tr_seed, _ = timed(lambda: _seed_transform(ker, centers, proj, x))
+
+        t_fit_new, mdl = timed(
+            lambda: fit(x, ker, rank, method="shadow", ell=ell))
+        t_tr_new, _ = timed(lambda: mdl.transform(x))
+
+        row = dict(
+            n=n, m=mdl.m,
+            fit_seed_s=round(t_fit_seed, 4), fit_s=round(t_fit_new, 4),
+            fit_speedup=round(t_fit_seed / t_fit_new, 2),
+            transform_seed_s=round(t_tr_seed, 4),
+            transform_s=round(t_tr_new, 4),
+            transform_speedup=round(t_tr_seed / t_tr_new, 2),
+        )
+        rows.append(row)
+        emit(f"rskpca_fit_n{n}", t_fit_new * 1e6, **{
+            k: v for k, v in row.items() if k not in ("n",)})
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"bench": "rskpca_fit_transform", "rank": rank, "ell": ell,
+                   "backend_default": "pallas(interpret on CPU)",
+                   "rows": rows}, f, indent=2)
+    print(f"# wrote {BENCH_JSON}", flush=True)
 
 _CHILD = """
 import os, time
@@ -30,8 +125,8 @@ from repro.core.distributed import distributed_shadow_rsde
 from repro.core import mmd as M
 from repro.data import make_dataset
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 for n in (4096, 16384):
     x, _, sigma = make_dataset("pendigits", seed=0, n=n)
     ker = gaussian(sigma)
@@ -51,6 +146,7 @@ for n in (4096, 16384):
 
 
 def main(fast: bool = True):
+    bench_fit(fast=fast)
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(

@@ -15,8 +15,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (e.g. table2,fig6)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="<60s perf smoke: only the RSKPCA fit/transform "
+                         "scaling bench; writes BENCH_rskpca.json")
     args = ap.parse_args()
     fast = not args.full
+
+    if args.smoke:
+        from benchmarks import rskpca_scale
+        print("# --- rskpca fit/transform smoke ---", flush=True)
+        rskpca_scale.bench_fit(fast=True)
+        return
 
     from benchmarks import (table2_cost, fig23_eigenembedding,
                             fig45_classification, fig6_retention,

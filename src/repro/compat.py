@@ -1,0 +1,59 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The repo targets the modern jax API (``jax.shard_map``, ``jax.make_mesh``
+with ``axis_types``), but the container pins an older jax where those live
+under ``jax.experimental.shard_map`` / have no ``axis_types`` kwarg.  All
+mesh construction and shard_map entry points route through here so the rest
+of the code can be written once against the new names.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+#: The optimized deferred-grad schedule (2D expert sharding inside a
+#: partially-manual shard_map) aborts the SPMD partitioner on old jax (XLA
+#: CHECK ``sharding.IsManualSubgroup()``, an uncatchable process abort);
+#: it needs the native ``jax.shard_map``.  Callers gate on this flag.
+HAS_PARTIAL_AUTO_SHARD_MAP = _HAS_JAX_SHARD_MAP
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kwargs: Any) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``.
+
+    All call sites in this repo only ever pass ``AxisType.Auto``, which is
+    also the modern default, so dropping the kwarg is semantics-preserving.
+    """
+    if _HAS_AXIS_TYPES:
+        kwargs.setdefault(
+            "axis_types",
+            (jax.sharding.AxisType.Auto,) * len(tuple(axis_names)),
+        )
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+    kwargs.pop("axis_types", None)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """Dispatch to ``jax.shard_map`` (new) or experimental shard_map (old).
+
+    ``axis_names`` is the NEW api's set of manual axes; the old api takes the
+    complement as ``auto``.  ``check_vma`` maps to the old ``check_rep``.
+    """
+    if _HAS_JAX_SHARD_MAP:
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    manual = set(axis_names) if axis_names is not None else set(mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - manual
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)

@@ -2,11 +2,12 @@
 # the shadow density estimate (Algorithm 2), plus every baseline the paper
 # compares against and the §5 error-bound machinery.
 from repro.core.kernels_math import (  # noqa: F401
-    Kernel, gaussian, laplacian, make_kernel, gram_matrix, weighted_gram,
-    pairwise_sq_dists, kde, rsde_eval,
+    DEFAULT_BACKEND, Kernel, gaussian, laplacian, make_kernel, gram_matrix,
+    gram_matrix_dense, weighted_gram, pairwise_sq_dists, kde, rsde_eval,
 )
 from repro.core.shadow import (  # noqa: F401
-    shadow_select, shadow_select_np, shadow_select_host, two_level_merge,
+    shadow_select, shadow_select_np, shadow_select_host,
+    shadow_select_blocked, shadow_select_streaming, two_level_merge,
 )
 from repro.core.rsde import (  # noqa: F401
     RSDE, make_rsde, shadow_rsde, kmeans_rsde, paring_rsde, herding_rsde,

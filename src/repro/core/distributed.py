@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.kernels_math import Kernel, gram_matrix
 from repro.core.rsde import RSDE
 from repro.core import shadow as shadow_mod
@@ -55,7 +56,7 @@ def _two_level_select(x: Array, eps: Array, mesh: Mesh, axis: str,
         return all_c, all_w
 
     spec_in = P(axis, None)
-    all_c, all_w = jax.shard_map(
+    all_c, all_w = shard_map(
         level1, mesh=mesh, in_specs=(spec_in,),
         out_specs=(P(None, None), P(None)), check_vma=False,
     )(x)
@@ -108,7 +109,7 @@ def blocked_gram_rows(x, centers, kernel: Kernel, mesh: Mesh,
     def block(x_loc, c_rep):
         return gram_matrix(kernel, x_loc, c_rep)
 
-    return jax.shard_map(
+    return shard_map(
         block, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
         out_specs=P(axis, None), check_vma=False,
     )(x, c)
@@ -127,7 +128,7 @@ def distributed_assign(x, centers, mesh: Mesh, axis: str = "data") -> Array:
         )
         return jnp.argmin(d2, axis=1).astype(jnp.int32)
 
-    return jax.shard_map(
+    return shard_map(
         block, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
         out_specs=P(axis), check_vma=False,
     )(x, c)

@@ -16,16 +16,39 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as _pallas_ops
+
 Array = jax.Array
+
+#: Default compute backend for every Gram-shaped op.  "pallas" routes through
+#: the fused kernels in repro.kernels.ops (real Pallas on TPU, interpret
+#: elsewhere); "dense" is the pure-jnp oracle path kept for parity testing.
+DEFAULT_BACKEND = "pallas"
+_BACKENDS = ("pallas", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
 class Kernel:
-    """A radially symmetric kernel k(x,y) = phi(||x-y||^p / sigma^p)."""
+    """A radially symmetric kernel k(x,y) = phi(||x-y||^p / sigma^p).
+
+    ``backend`` selects the compute path for all Gram-shaped ops made with
+    this kernel (DESIGN.md §3): the fused Pallas kernels (default) or the
+    dense jnp oracle.  Both are numerically interchangeable (parity-tested to
+    1e-5 in tests/test_kernels.py).
+    """
 
     name: str
     sigma: float
     p: int  # exponent of the norm (2 = Gaussian, 1 = Laplacian)
+    backend: str = DEFAULT_BACKEND
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {_BACKENDS}")
+
+    def with_backend(self, backend: str) -> "Kernel":
+        return dataclasses.replace(self, backend=backend)
 
     @property
     def kappa(self) -> float:
@@ -65,19 +88,20 @@ class Kernel:
         return self.sigma / ell
 
 
-def gaussian(sigma: float) -> Kernel:
-    return Kernel(name="gaussian", sigma=float(sigma), p=2)
+def gaussian(sigma: float, backend: str = DEFAULT_BACKEND) -> Kernel:
+    return Kernel(name="gaussian", sigma=float(sigma), p=2, backend=backend)
 
 
-def laplacian(sigma: float) -> Kernel:
-    return Kernel(name="laplacian", sigma=float(sigma), p=1)
+def laplacian(sigma: float, backend: str = DEFAULT_BACKEND) -> Kernel:
+    return Kernel(name="laplacian", sigma=float(sigma), p=1, backend=backend)
 
 
-def make_kernel(name: str, sigma: float) -> Kernel:
+def make_kernel(name: str, sigma: float,
+                backend: str = DEFAULT_BACKEND) -> Kernel:
     if name == "gaussian":
-        return gaussian(sigma)
+        return gaussian(sigma, backend)
     if name == "laplacian":
-        return laplacian(sigma)
+        return laplacian(sigma, backend)
     raise ValueError(f"unknown kernel {name!r}")
 
 
@@ -103,11 +127,12 @@ def _dist_pow(sq: Array, p: int) -> Array:
     return jnp.power(sq, p / 2.0)
 
 
-def gram_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
+def gram_matrix_dense(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
     """Dense Gram matrix K_ij = k(x_i, y_j). Pure-jnp reference path.
 
     The Pallas kernel in ``repro.kernels.gram`` computes the same quantity
-    blockwise on TPU; this function is the numerical oracle.
+    blockwise; this function is the numerical oracle the Pallas path is
+    parity-tested against.
     """
     if y is None:
         y = x
@@ -115,9 +140,29 @@ def gram_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
     return jnp.exp(-_dist_pow(sq, kernel.p) / (kernel.sigma**kernel.p))
 
 
+def gram_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
+    """Gram matrix K_ij = k(x_i, y_j), dispatched on ``kernel.backend``.
+
+    Every Gram-shaped computation in the repo funnels through here (or the
+    fused variants below), so the backend switch covers fit, transform, MMD
+    checks, and the RSDE schemes uniformly (DESIGN.md §3).
+    """
+    if kernel.backend == "pallas":
+        return _pallas_ops.gram(x, x if y is None else y,
+                                sigma=kernel.sigma, p=kernel.p)
+    return gram_matrix_dense(kernel, x, y)
+
+
 def weighted_gram(kernel: Kernel, centers: Array, weights: Array) -> Array:
-    """K-tilde = W K^C W with W = diag(sqrt(w)) (Algorithm 1 / Eq. 13)."""
-    kc = gram_matrix(kernel, centers, centers)
+    """K-tilde = W K^C W with W = diag(sqrt(w)) (Algorithm 1 / Eq. 13).
+
+    On the Pallas backend the weighting is fused into the Gram block pass —
+    the unweighted m x m matrix never materializes.
+    """
+    if kernel.backend == "pallas":
+        return _pallas_ops.weighted_gram(centers, weights,
+                                         sigma=kernel.sigma, p=kernel.p)
+    kc = gram_matrix_dense(kernel, centers, centers)
     sw = jnp.sqrt(weights.astype(kc.dtype))
     return kc * sw[:, None] * sw[None, :]
 

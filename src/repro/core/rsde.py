@@ -42,11 +42,29 @@ class RSDE:
         return self.m / self.n
 
 
-def shadow_rsde(x, kernel: Kernel, ell: float) -> RSDE:
-    """ShDE via Algorithm 2 with eps = sigma/ell."""
-    centers, weights, assign, m = shadow_mod.shadow_select_host(
-        x, kernel.epsilon(ell)
-    )
+def shadow_rsde(x, kernel: Kernel, ell: float, *,
+                selector: str = "blocked", block: int = 256,
+                chunk: int = 8192) -> RSDE:
+    """ShDE via Algorithm 2 with eps = sigma/ell.
+
+    ``selector`` picks the implementation (DESIGN.md §3):
+      * "blocked"    — batched selection, ~m/B sequential rounds (default);
+      * "sequential" — the paper's literal one-center-per-iteration scan;
+      * "streaming"  — per-chunk blocked selection + two-level merge (2*eps
+        cover) for datasets that don't fit in device memory.
+    All produce a valid eps-cover whose weights sum to n.
+    """
+    eps = kernel.epsilon(ell)
+    if selector == "blocked":
+        centers, weights, assign, m = shadow_mod.shadow_select_blocked(
+            x, eps, block=block)
+    elif selector == "sequential":
+        centers, weights, assign, m = shadow_mod.shadow_select_host(x, eps)
+    elif selector == "streaming":
+        centers, weights, assign, m = shadow_mod.shadow_select_streaming(
+            x, eps, chunk=chunk, block=block)
+    else:
+        raise ValueError(f"unknown selector {selector!r}")
     return RSDE(centers, weights, n=np.shape(x)[0], assign=assign, scheme="shadow")
 
 
@@ -147,6 +165,6 @@ def make_rsde(scheme: str, x, kernel: Kernel, *, ell: float | None = None,
     paper, where the average shadow m sets m for the competing schemes)."""
     if scheme == "shadow":
         assert ell is not None, "shadow RSDE is parameterized by ell"
-        return shadow_rsde(x, kernel, ell)
+        return shadow_rsde(x, kernel, ell, **kw)
     assert m is not None, f"{scheme} RSDE needs an explicit m"
     return _SCHEMES[scheme](x, kernel, m=m, **kw)

@@ -25,15 +25,22 @@ after center selection (unlike Nystrom).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kernels_math import Kernel, gram_matrix
+from repro.core.kernels_math import (Kernel, gram_matrix, gram_matrix_dense,
+                                     weighted_gram)
 from repro.core.rsde import RSDE, make_rsde
+from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
+
+#: Query rows are streamed through transform in slices of this size so a huge
+#: query set never materializes a full q x m working set on device.
+TRANSFORM_CHUNK = 8192
 
 
 @dataclasses.dataclass
@@ -58,33 +65,77 @@ class KPCAModel:
     def rank(self) -> int:
         return self.projector.shape[1]
 
-    def transform(self, x) -> np.ndarray:
-        """Embed query points: O(q * m * (d + r))."""
-        k_xc = gram_matrix(self.kernel, jnp.asarray(x), jnp.asarray(self.centers))
-        return np.asarray(k_xc @ jnp.asarray(self.projector))
+    def transform(self, x, chunk: int = TRANSFORM_CHUNK) -> np.ndarray:
+        """Embed query points: O(q * m * (d + r)), streamed in fixed chunks.
+
+        On the Pallas backend the kernel evaluation and the projection matmul
+        are fused (repro.kernels.kpca_project) — the (chunk, m) Gram block
+        stays in VMEM and only the (chunk, r) embedding is written back.
+        """
+        if self.kernel.backend == "pallas":
+            # no host roundtrip: device-resident queries go straight through
+            z = kernel_ops.kpca_project(
+                x, self.centers, self.projector,
+                sigma=self.kernel.sigma, p=self.kernel.p, chunk=chunk)
+            return np.asarray(z)
+        x = np.asarray(x, np.float32)
+        chunk = x.shape[0] if chunk is None else chunk  # None = unchunked,
+        # matching the pallas branch's kpca_project(chunk=None) contract
+        out = np.empty((x.shape[0], self.rank), np.float32)
+        proj = jnp.asarray(self.projector)
+        cj = jnp.asarray(self.centers)
+        for s in range(0, x.shape[0], chunk):
+            k_xc = gram_matrix_dense(self.kernel, jnp.asarray(x[s : s + chunk]),
+                                     cj)
+            out[s : s + chunk] = np.asarray(k_xc @ proj)
+        return out
+
+
+#: Above this matrix size the full O(m^3) eigh is replaced by LOBPCG, which
+#: only iterates the top-``rank`` invariant subspace (O(m^2 r) per sweep).
+#: Kernel spectra decay fast, so it converges in a handful of iterations to
+#: ~1e-4 relative error (parity-tested in tests/test_rskpca.py); small
+#: problems keep the exact solver so all paper-parity tests run through
+#: eigh unchanged.
+_LOBPCG_MIN_M = 2048
 
 
 def _top_eigh(mat: Array, rank: int):
-    """Top-``rank`` eigenpairs of a symmetric matrix, descending."""
+    """Top-``rank`` eigenpairs of a symmetric PSD matrix, descending."""
+    m = mat.shape[0]
+    if m > _LOBPCG_MIN_M and 5 * rank < m:
+        from jax.experimental.sparse.linalg import lobpcg_standard
+        x0 = jax.random.normal(jax.random.PRNGKey(0), (m, rank), mat.dtype)
+        lam, vec, _ = lobpcg_standard(mat, x0, m=100)
+        return lam, vec  # already descending
     lam, vec = jnp.linalg.eigh(mat)  # ascending
     lam = lam[::-1][:rank]
     vec = vec[:, ::-1][:, :rank]
     return lam, vec
 
 
-def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int) -> KPCAModel:
-    """Algorithm 1: weighted m x m Gram, eigh, fold weights into projector."""
-    c = jnp.asarray(rsde.centers, jnp.float32)
-    w = jnp.asarray(rsde.weights, jnp.float32)
+@partial(jax.jit, static_argnames=("kernel", "rank"))
+def _fit_rskpca_device(c: Array, w: Array, n: Array, kernel: Kernel,
+                       rank: int):
+    """Algorithm 1 on device, end-to-end under one jit: fused W K^C W
+    (Pallas on the default backend), eigh, and the projector fold — nothing
+    round-trips to host between center selection and the projector."""
     sw = jnp.sqrt(w)
-    kc = gram_matrix(kernel, c, c)
-    k_tilde = kc * sw[:, None] * sw[None, :] / rsde.n  # normalized (divide by n)
+    k_tilde = weighted_gram(kernel, c, w) / n  # normalized (divide by n)
     lam, u = _top_eigh(k_tilde, rank)
     lam = jnp.maximum(lam, 1e-12)
     # A = diag(sqrt(w)) U Lambda^{-1/2} / sqrt(n): z(x) = k(x,C) A has the same
     # scale as classical KPCA's z(x) = k(x,X) V Lambda_mat^{-1/2} (checked in
     # tests/test_rskpca.py::test_limit_equals_kpca).
-    proj = (sw[:, None] * u) / jnp.sqrt(lam)[None, :] / np.sqrt(rsde.n)
+    proj = (sw[:, None] * u) / jnp.sqrt(lam)[None, :] / jnp.sqrt(n)
+    return lam, proj
+
+
+def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int) -> KPCAModel:
+    """Algorithm 1: weighted m x m Gram, eigh, fold weights into projector."""
+    c = jnp.asarray(rsde.centers, jnp.float32)
+    w = jnp.asarray(rsde.weights, jnp.float32)
+    lam, proj = _fit_rskpca_device(c, w, jnp.float32(rsde.n), kernel, rank)
     return KPCAModel(
         kernel=kernel,
         centers=np.asarray(rsde.centers, np.float32),
@@ -126,8 +177,16 @@ def fit_subsampled_kpca(x, kernel: Kernel, rank: int, m: int,
 
 
 def fit(x, kernel: Kernel, rank: int, *, method: str = "shadow",
-        ell: float | None = None, m: int | None = None, **kw) -> KPCAModel:
-    """One-call front door: RSDE scheme name, 'kpca', or 'uniform'."""
+        ell: float | None = None, m: int | None = None,
+        backend: str | None = None, **kw) -> KPCAModel:
+    """One-call front door: RSDE scheme name, 'kpca', or 'uniform'.
+
+    ``backend`` overrides the kernel's compute path ("pallas" | "dense") for
+    this fit and the returned model — the parity-testing switch of
+    DESIGN.md §3.
+    """
+    if backend is not None:
+        kernel = kernel.with_backend(backend)
     if method == "kpca":
         return fit_kpca(x, kernel, rank)
     if method == "uniform":

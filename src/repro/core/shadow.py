@@ -4,17 +4,24 @@ Greedy single-pass epsilon-cover: take the first remaining point ``c``, absorb
 every point within ``eps = sigma / ell`` (the *shadow* of ``c``), weight ``c``
 by the shadow size, repeat until the dataset is exhausted.  Cost O(mn).
 
-Two implementations:
-  * ``shadow_select_np``  — numpy oracle, literal transcription of Algorithm 2.
-  * ``shadow_select``     — jittable ``lax.while_loop`` version with static
-    padding (``max_centers``); returns (centers, weights, assign, m).
+Implementations (DESIGN.md §3):
+  * ``shadow_select_np``      — numpy oracle, literal Algorithm 2.
+  * ``shadow_select``         — jittable ``lax.while_loop`` version with
+    static padding (``max_centers``); sequential depth m.
+  * ``shadow_select_blocked`` — blocked selector: each round keeps a batch of
+    up to B mutually-eps-separated candidates and absorbs all their shadows
+    in ONE Pallas assignment pass, cutting sequential depth from m to ~m/B.
+  * ``shadow_select_streaming`` — two-level path for data that doesn't fit in
+    device memory: per-chunk blocked selection + ``two_level_merge`` (cover
+    radius degrades to 2*eps; the §5 bounds hold with ell -> ell/2).
 
 Invariants (property-tested in tests/test_shadow.py):
   * every data point lies strictly within eps of its assigned center;
   * shadow sets partition the data: weights sum to n;
-  * centers are pairwise >= eps apart ... for the *sequential* algorithm
-    (each new center was not absorbed by any earlier one);
-  * m is monotonically non-increasing in eps.
+  * centers are pairwise >= eps apart (blocked selection preserves this: the
+    batch is pruned to a mutually-separated prefix subset, and later rounds
+    only see points no earlier center absorbed);
+  * m is monotonically non-increasing in eps ... for the sequential order.
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
 
@@ -109,6 +118,122 @@ def shadow_select_host(x, eps: float):
     centers, weights, assign, m = shadow_select(x, eps, max_centers=x.shape[0])
     m = int(m)
     return np.asarray(centers[:m]), np.asarray(weights[:m]), np.asarray(assign), m
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _blocked_round(xf: Array, alive: Array, eps2: Array, block: int):
+    """One round of blocked selection (all-device, no host sync inside).
+
+    1. Gather the first ``block`` still-alive points (in index order) as the
+       candidate batch.
+    2. Prune the batch to the greedy prefix-independent subset: candidate j
+       is KEPT iff it is >= eps from every kept candidate before it — the
+       same rule sequential Algorithm 2 applies, restricted to the batch.
+    3. Absorb: one Pallas nearest-center pass of ALL points against the kept
+       candidates; any alive point strictly within eps joins the shadow of
+       its nearest kept candidate.
+
+    Every alive candidate leaves the alive set each round (kept ones absorb
+    themselves; dropped ones are within eps of the keeper that shadowed
+    them), so the round count is <= ceil(m/1) and typically ~m/B.
+    """
+    n = xf.shape[0]
+    iota = jnp.arange(n)
+    # indices of the first `block` alive points (dead points sort last)
+    order = jnp.argsort(jnp.where(alive, iota, n + iota))
+    cand_idx = order[:block]
+    cand_alive = alive[cand_idx]
+    cand = xf[cand_idx]                                    # (B, d)
+    d2c = jnp.sum((cand[:, None, :] - cand[None, :, :]) ** 2, axis=-1)
+
+    def pick(j, keep):
+        sep = jnp.all(jnp.where(keep, d2c[:, j] >= eps2, True))
+        return keep.at[j].set(cand_alive[j] & sep)
+
+    keep = jax.lax.fori_loop(0, block, pick, jnp.zeros((block,), bool))
+
+    idx, d2min = kernel_ops.shadow_assign(
+        xf, cand, valid=keep.astype(jnp.float32))
+    # Candidate rows must resolve against the batch via the direct-difference
+    # d2c, which is exact at zero distance: the assign kernel's expansion form
+    # rounds off near zero, and at tiny eps a keeper could then fail to absorb
+    # even itself and the round would never make progress.  This also
+    # guarantees every alive candidate leaves the alive set each round (a
+    # dropped candidate is, by the pick rule, within eps of some keeper).
+    d2c_kept = jnp.where(keep[:, None], d2c, jnp.inf)      # (B, B)
+    idx = idx.at[cand_idx].set(jnp.argmin(d2c_kept, axis=0).astype(idx.dtype))
+    d2min = d2min.at[cand_idx].set(jnp.min(d2c_kept, axis=0))
+    absorbed = alive & (d2min < eps2)
+    counts = jnp.zeros((block,), jnp.float32).at[idx].add(
+        jnp.where(absorbed, 1.0, 0.0))
+    kept_rank = jnp.cumsum(keep) - 1                       # rank among kept
+    return cand, keep, counts, idx, absorbed, kept_rank, alive & ~absorbed
+
+
+def shadow_select_blocked(x, eps: float, block: int = 256):
+    """Blocked Algorithm 2: ~m/B sequential rounds instead of m iterations.
+
+    Returns (centers (m, d), weights (m,), assign (n,), m) exactly like
+    ``shadow_select_host``.  The center SET differs from the sequential order
+    (points absorb to their NEAREST keeper, not the first), but all cover
+    invariants hold: strict eps-cover, weights partition n, centers pairwise
+    >= eps apart.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    n = xf.shape[0]
+    block = max(1, min(block, n))
+    eps2 = jnp.asarray(eps, jnp.float32) ** 2
+    alive = jnp.ones((n,), bool)
+    assign = np.full((n,), -1, np.int64)
+    centers, weights = [], []
+    m = 0
+    while bool(alive.any()):
+        cand, keep, counts, idx, absorbed, kept_rank, alive = _blocked_round(
+            xf, alive, eps2, block)
+        kept = np.flatnonzero(np.asarray(keep))
+        centers.append(np.asarray(cand)[kept])
+        weights.append(np.asarray(counts)[kept])
+        ab = np.asarray(absorbed)
+        assign[ab] = m + np.asarray(kept_rank)[np.asarray(idx)[ab]]
+        m += len(kept)
+    return (np.concatenate(centers), np.concatenate(weights).astype(np.float64),
+            assign, m)
+
+
+def shadow_select_streaming(x, eps: float, chunk: int = 8192,
+                            block: int = 256):
+    """Two-level streaming selection for out-of-memory datasets.
+
+    Level 1 runs blocked selection per fixed-size chunk (only one chunk is
+    device-resident at a time); level 2 merges the chunk centers with
+    ``two_level_merge``.  Cover radius is 2*eps (triangle inequality), i.e.
+    the §5 bounds hold with ell -> ell/2; the final assign map is recovered
+    with one Pallas assignment pass per chunk.
+
+    Returns (centers, weights, assign, m).  Unlike the one-level selectors,
+    ``weights`` are the MERGED level-1 shadow masses while ``assign`` maps
+    each point to its NEAREST merged center, so ``bincount(assign)`` need
+    not equal ``weights`` — both are valid 2*eps quantizations, they just
+    answer different questions (density mass vs. nearest-cover membership).
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    cs, ws = [], []
+    for s in range(0, n, chunk):
+        c, w, _, _ = shadow_select_blocked(x[s : s + chunk], eps, block=block)
+        cs.append(c)
+        ws.append(w)
+    all_c = jnp.asarray(np.concatenate(cs), jnp.float32)
+    all_w = jnp.asarray(np.concatenate(ws), jnp.float32)
+    out_c, out_w, m = two_level_merge(all_c, all_w, jnp.float32(eps),
+                                      max_centers=all_c.shape[0])
+    m = int(m)
+    centers = np.asarray(out_c[:m])
+    assign = np.empty((n,), np.int64)
+    for s in range(0, n, chunk):
+        idx, _ = kernel_ops.shadow_assign(x[s : s + chunk], centers)
+        assign[s : s + chunk] = np.asarray(idx)
+    return centers, np.asarray(out_w[:m], np.float64), assign, m
 
 
 def two_level_merge(centers: Array, weights: Array, eps: Array,

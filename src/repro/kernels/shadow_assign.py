@@ -1,12 +1,15 @@
 """Pallas TPU kernel: nearest-center assignment pass.
 
-Drives (a) the data->center map alpha of §5 and (b) the inner distance pass of
-blocked shadow selection.  Grid over row tiles of X; the (small) center set
-is resident in VMEM and swept in ``block_m`` column tiles with a running
-(argmin, min) pair so arbitrary m fits the same kernel.
+Drives (a) the data->center map alpha of §5 and (b) the inner absorption pass
+of blocked shadow selection (DESIGN.md §3).  Grid over row tiles of X; the
+(small) center set is resident in VMEM and swept in ``block_m`` column tiles
+with a running (argmin, min) pair so arbitrary m fits the same kernel.
 
-Padding protocol: callers pad centers to a multiple of block_m; ``m_valid``
-masks the padded tail with +inf so it can never win the argmin.
+Padding protocol: callers pad centers to a multiple of block_m and pass a
+``valid`` float mask (1 = real center); invalid slots are forced to +inf so
+they can never win the argmin.  The mask is DATA, not a static argument —
+blocked selection calls this kernel once per round with a different mask and
+must not retrace (the round loop is host-driven).
 """
 from __future__ import annotations
 
@@ -19,16 +22,17 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _assign_kernel(x_ref, c_ref, o_idx_ref, o_d2_ref, *, m_valid: int,
-                   block_m: int):
+def _assign_kernel(x_ref, c_ref, v_ref, o_idx_ref, o_d2_ref, *, block_m: int):
     x = x_ref[...].astype(jnp.float32)      # (bn, d)
     c = c_ref[...].astype(jnp.float32)      # (m_pad, d)
+    v = v_ref[...].astype(jnp.float32)      # (m_pad,)
     m_pad = c.shape[0]
     xx = jnp.sum(x * x, axis=-1, keepdims=True)  # (bn, 1)
 
     def sweep(k, carry):
         best_d2, best_idx = carry
         blk = jax.lax.dynamic_slice_in_dim(c, k * block_m, block_m, axis=0)
+        vblk = jax.lax.dynamic_slice_in_dim(v, k * block_m, block_m, axis=0)
         yy = jnp.sum(blk * blk, axis=-1, keepdims=True).T   # (1, bm)
         cross = jax.lax.dot_general(
             x, blk, (((1,), (1,)), ((), ())),
@@ -36,7 +40,7 @@ def _assign_kernel(x_ref, c_ref, o_idx_ref, o_d2_ref, *, m_valid: int,
         )
         d2 = jnp.maximum(xx + yy - 2.0 * cross, 0.0)        # (bn, bm)
         col = k * block_m + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
-        d2 = jnp.where(col < m_valid, d2, jnp.inf)
+        d2 = jnp.where(vblk[None, :] > 0.0, d2, jnp.inf)
         blk_d2 = jnp.min(d2, axis=1)
         blk_idx = col[jnp.arange(d2.shape[0]), jnp.argmin(d2, axis=1)]
         take = blk_d2 < best_d2
@@ -51,22 +55,27 @@ def _assign_kernel(x_ref, c_ref, o_idx_ref, o_d2_ref, *, m_valid: int,
     o_d2_ref[...] = best_d2
 
 
-def shadow_assign_pallas(x: Array, centers: Array, m_valid: int, *,
+def shadow_assign_pallas(x: Array, centers: Array, valid: Array, *,
                          block_n: int = 512, block_m: int = 128,
                          interpret: bool = False):
-    """Returns (idx (n,), d2min (n,)) of the nearest valid center."""
+    """Returns (idx (n,), d2min (n,)) of the nearest valid center.
+
+    ``valid`` is a (m_pad,) float mask; slots with valid <= 0 never win.  If
+    NO center is valid, d2min is +inf and idx is 0 — callers gate on d2min.
+    """
     n, d = x.shape
     m_pad, d2_ = centers.shape
     assert d == d2_ and n % block_n == 0 and m_pad % block_m == 0
+    assert valid.shape == (m_pad,)
 
-    kernel = functools.partial(_assign_kernel, m_valid=int(m_valid),
-                               block_m=block_m)
+    kernel = functools.partial(_assign_kernel, block_m=block_m)
     return pl.pallas_call(
         kernel,
         grid=(n // block_n,),
         in_specs=[
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),
             pl.BlockSpec((m_pad, d), lambda i: (0, 0)),  # centers resident
+            pl.BlockSpec((m_pad,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((block_n,), lambda i: (i,)),
@@ -77,4 +86,4 @@ def shadow_assign_pallas(x: Array, centers: Array, m_valid: int, *,
             jax.ShapeDtypeStruct((n,), jnp.float32),
         ],
         interpret=interpret,
-    )(x, centers)
+    )(x, centers, valid)

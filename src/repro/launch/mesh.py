@@ -10,14 +10,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:
@@ -29,8 +28,5 @@ def smoke_mesh(n: int | None = None, with_model: bool = False):
     """Host-device mesh for tests (requires xla_force_host_platform_device_count)."""
     n = n or len(jax.devices())
     if with_model and n >= 4:
-        return jax.make_mesh(
-            (n // 2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+        return make_mesh((n // 2, 2), ("data", "model"))
+    return make_mesh((n,), ("data",))

@@ -1,0 +1,68 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container image has no ``hypothesis`` wheel and the brief forbids
+installing one, so the property tests fall back to this shim: each
+``@given`` test runs against ``max_examples`` pseudo-random draws from the
+declared strategies, seeded from the test name so failures reproduce.
+
+Only the tiny surface these tests use is implemented: ``integers``,
+``floats``, ``given``, ``settings``.  No shrinking, no database — a failing
+example is reported via the test's own assertion message (the kwargs are
+attached to the AssertionError text).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOT functools.wraps: pytest must see a zero-arg signature, not the
+        # strategy parameters (it would treat them as fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                kwargs = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(**kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {kwargs}: {e}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

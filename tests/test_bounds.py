@@ -4,7 +4,11 @@ Every bound must hold for ANY dataset, kernel in {gaussian, laplacian},
 and ell — this is the strongest validation of the reproduction's math.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import gaussian, laplacian, shadow_select_host
 from repro.core import mmd as M

@@ -37,8 +37,8 @@ from repro.core import mmd as M
 from repro.data import make_dataset
 x, y, sigma = make_dataset("pendigits", seed=1, n=1024)
 ker = gaussian(sigma)
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 r1 = shadow_rsde(x, ker, 4.0)
 r2 = distributed_shadow_rsde(x, ker, 4.0, mesh)
 assert abs(r2.weights.sum() - 1024) < 1e-3
@@ -65,8 +65,8 @@ from repro.models import api
 from repro.launch import steps, sharding as shd
 from jax.sharding import NamedSharding, PartitionSpec as P
 cfg = get_config("mixtral_8x7b", smoke=True)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 shape = api.ShapeSpec("t", 32, 4, "train")
 params_spec = api.param_specs(cfg)
 p_sh = shd.param_shardings(params_spec, mesh, cfg)
@@ -99,8 +99,8 @@ from repro.configs import get_config
 from repro.models import api
 from repro.launch import steps, sharding as shd
 cfg = get_config("gemma2_9b", smoke=True)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 shape = api.ShapeSpec("d", 32, 4, "decode")
 lowered, _ = steps.lower_decode(cfg, shape, mesh)
 compiled = lowered.compile()

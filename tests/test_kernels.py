@@ -83,6 +83,82 @@ def test_kpca_project_sweep(n, m, d, r):
     np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
 
 
+DISPATCH_SHAPES = [(64, 16, 8), (100, 37, 24), (513, 129, 16), (1000, 7, 96)]
+
+
+@pytest.mark.parametrize("n,m,d", DISPATCH_SHAPES)
+@pytest.mark.parametrize("p", [2, 1])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_backend_dispatch_parity(n, m, d, p, weighted):
+    """kernel.backend='pallas' and 'dense' agree to 1e-5 through the public
+    gram_matrix / weighted_gram dispatch (non-block-multiple shapes incl.)."""
+    from repro.core.kernels_math import (make_kernel, gram_matrix,
+                                         weighted_gram)
+    rng = np.random.default_rng(hash((n, m, d, p, weighted)) % 2**32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    name = "gaussian" if p == 2 else "laplacian"
+    kp = make_kernel(name, 1.7, backend="pallas")
+    kd = make_kernel(name, 1.7, backend="dense")
+    if weighted:
+        w = rng.uniform(0.5, 5, n).astype(np.float32)
+        got = np.asarray(weighted_gram(kp, jnp.asarray(x), jnp.asarray(w)))
+        want = np.asarray(weighted_gram(kd, jnp.asarray(x), jnp.asarray(w)))
+    else:
+        y = rng.normal(size=(m, d)).astype(np.float32)
+        got = np.asarray(gram_matrix(kp, jnp.asarray(x), jnp.asarray(y)))
+        want = np.asarray(gram_matrix(kd, jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_default_backend_never_calls_dense_gram(monkeypatch):
+    """Acceptance guard: on the default backend neither fit_rskpca, fit_kpca,
+    herding, nor transform may touch the dense gram path."""
+    from repro.core import kernels_math, rskpca, rsde
+
+    def boom(*a, **kw):
+        raise AssertionError("dense gram_matrix called on default backend")
+
+    monkeypatch.setattr(kernels_math, "gram_matrix_dense", boom)
+    monkeypatch.setattr(kernels_math, "pairwise_sq_dists", boom)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(300, 6)).astype(np.float32)
+    ker = kernels_math.gaussian(1.0)
+    assert ker.backend == "pallas"
+    mdl = rskpca.fit(x, ker, 4, method="shadow", ell=3.0)
+    z = mdl.transform(x[:50])
+    assert np.isfinite(z).all()
+    mdl2 = rskpca.fit_kpca(x[:100], ker, 4)
+    assert np.isfinite(mdl2.transform(x[:10])).all()
+    r = rsde.herding_rsde(x[:100], ker, m=10)
+    assert r.m == 10
+
+
+def test_transform_chunked_matches_unchunked():
+    """Streaming transform in small fixed chunks == one-shot transform."""
+    from repro.core import gaussian, fit
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(700, 12)).astype(np.float32)
+    mdl = fit(x, gaussian(1.5), 5, method="shadow", ell=3.0)
+    q = rng.normal(size=(1111, 12)).astype(np.float32)
+    np.testing.assert_allclose(mdl.transform(q, chunk=128),
+                               mdl.transform(q, chunk=10**9),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_shadow_assign_dynamic_valid_mask():
+    """A dynamic per-center mask must behave exactly like the static prefix."""
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(200, 8)).astype(np.float32)
+    c = rng.normal(size=(17, 8)).astype(np.float32)
+    mask = (rng.random(17) > 0.4).astype(np.float32)
+    idx, d2 = ops.shadow_assign(x, c, valid=mask)
+    dense = np.linalg.norm(x[:, None] - c[None], axis=2) ** 2
+    dense[:, mask == 0] = np.inf
+    assert (np.asarray(idx) == dense.argmin(1)).all()
+    np.testing.assert_allclose(np.asarray(d2), dense.min(1), atol=1e-4,
+                               rtol=1e-4)
+
+
 def test_block_size_selection_respects_vmem_budget():
     from repro.kernels.ops import pick_gram_blocks
     for d in (8, 64, 512, 4096, 8192):

@@ -87,6 +87,50 @@ def test_front_door_and_schemes(data):
         assert z.shape == (10, 4) and np.isfinite(z).all(), method
 
 
+def test_backend_switch_parity(data):
+    """fit(..., backend=...) must give numerically matching models, and the
+    backend must propagate to the returned model's transform path."""
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    mp = fit(x, ker, 5, method="shadow", ell=3.0, backend="pallas")
+    md = fit(x, ker, 5, method="shadow", ell=3.0, backend="dense")
+    assert mp.kernel.backend == "pallas" and md.kernel.backend == "dense"
+    np.testing.assert_allclose(mp.eigvals, md.eigvals, rtol=1e-4)
+    q = x[:64]
+    np.testing.assert_allclose(mp.transform(q), md.transform(q),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_selector_variants_fit_equivalently(data):
+    """blocked / sequential / streaming selectors all produce usable RSKPCA
+    models with comparable embedding quality."""
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    ref = fit_kpca(x, ker, rank=4).transform(x[:100])
+    errs = {}
+    for sel in ("blocked", "sequential", "streaming"):
+        mdl = fit(x, ker, 4, method="shadow", ell=6.0, selector=sel)
+        errs[sel] = embedding_alignment_error(ref, mdl.transform(x[:100]))
+    scale = np.linalg.norm(ref)
+    assert all(e < 0.5 * scale for e in errs.values()), errs
+
+
+def test_top_eigh_lobpcg_branch_matches_eigh():
+    """The large-m LOBPCG path (unreachable from the small fixtures) must
+    agree with exact eigh on a kernel-shaped spectrum."""
+    import jax.numpy as jnp
+    from repro.core.rskpca import _top_eigh, _LOBPCG_MIN_M
+
+    m = _LOBPCG_MIN_M + 150
+    rng = np.random.default_rng(0)
+    q, _ = np.linalg.qr(rng.normal(size=(m, 40)))
+    lam_true = 2.0 ** -np.arange(40)  # fast-decaying, like a kernel spectrum
+    mat = jnp.asarray((q * lam_true) @ q.T, jnp.float32)
+    lam, vec = _top_eigh(mat, 6)
+    assert vec.shape == (m, 6)
+    np.testing.assert_allclose(np.asarray(lam), lam_true[:6], rtol=5e-4)
+
+
 def test_laplacian_kernel_works(data):
     x, _, sigma = data
     ker = laplacian(sigma)

@@ -1,9 +1,15 @@
 """Algorithm 2 (shadow selection): oracle equivalence + invariant properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import shadow_select_np, shadow_select_host, gaussian
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (shadow_select_np, shadow_select_host,
+                        shadow_select_blocked, shadow_select_streaming,
+                        gaussian)
 from repro.core.shadow import two_level_merge
 
 import jax.numpy as jnp
@@ -93,6 +99,52 @@ def test_two_level_merge_preserves_weight_and_cover():
     # 2-eps cover (DESIGN.md two-level bound)
     d = np.linalg.norm(x[:, None] - np.asarray(out_c[:m])[None], axis=2).min(1)
     assert (d < 2 * eps + 1e-5).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 300), d=st.integers(1, 16),
+       eps=st.floats(0.01, 2.0), block=st.integers(1, 64),
+       seed=st.integers(0, 10**6))
+def test_blocked_matches_sequential_invariants(n, d, eps, block, seed):
+    """Blocked selection must satisfy the SAME cover invariants as the
+    sequential algorithm: strict eps-cover, weights partition n, centers
+    pairwise >= eps apart (the center set itself may differ)."""
+    x = _data(n, d, seed)
+    c, w, a, m = shadow_select_blocked(x, eps, block=block)
+    assert w.sum() == n
+    assert (a >= 0).all() and (a < m).all()
+    dist = np.linalg.norm(x - c[a], axis=1)
+    assert (dist < eps + 1e-5).all()
+    if m > 1:
+        d2 = ((c[:, None] - c[None]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        assert np.sqrt(d2.min()) >= eps - 1e-5
+
+
+def test_blocked_block1_matches_sequential_exactly():
+    """With B=1 the blocked selector degenerates to Algorithm 2 verbatim."""
+    x = _data(250, 5, 2)
+    for eps in (0.1, 0.3, 0.8):
+        c_s, w_s, a_s, m_s = shadow_select_host(x, eps)
+        c_b, w_b, a_b, m_b = shadow_select_blocked(x, eps, block=1)
+        assert m_b == m_s
+        np.testing.assert_allclose(c_b, c_s, atol=1e-6)
+        np.testing.assert_allclose(w_b, w_s)
+        assert (a_b == a_s).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(50, 400), d=st.integers(1, 8),
+       eps=st.floats(0.05, 1.0), seed=st.integers(0, 10**6))
+def test_streaming_two_level_cover(n, d, eps, seed):
+    """Streaming selection: weights partition n; 2*eps cover (two-level)."""
+    x = _data(n, d, seed)
+    c, w, a, m = shadow_select_streaming(x, eps, chunk=max(32, n // 3),
+                                         block=32)
+    assert abs(w.sum() - n) < 1e-3
+    assert (a >= 0).all() and (a < m).all()
+    dist = np.linalg.norm(x - c[a], axis=1)
+    assert (dist < 2 * eps + 1e-5).all()
 
 
 def test_max_centers_overflow_guard():
