@@ -1,7 +1,8 @@
 PYTHONPATH := src
 
-.PHONY: test bench bench-smoke
+.PHONY: test bench bench-smoke bench-shard
 
+# the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
@@ -9,7 +10,14 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
-# <60s perf smoke: seed-vs-current RSKPCA fit/transform at n in {2k,8k,32k};
-# refreshes BENCH_rskpca.json so every PR leaves a perf trajectory point
+# fast (~1-2 min) perf smoke: seed-vs-current RSKPCA fit/transform at
+# n in {2k,8k,32k}, interleaved min-of-reps timing; refreshes
+# BENCH_rskpca.json so every PR leaves a perf trajectory point, and fails
+# if any freshly-measured row has fit_speedup < 1.0
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke
+
+# smoke + the sharded mixed-precision path: appends sharded/bf16 rows
+# (multi-host-device mesh, bf16 MXU operands) to BENCH_rskpca.json
+bench-shard:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke --mesh --precision bf16

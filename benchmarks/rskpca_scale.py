@@ -64,57 +64,186 @@ def _seed_transform(ker, centers, proj, q):
     return np.asarray(k_qc @ jnp.asarray(proj))
 
 
+def _timed_interleaved(fns: dict, reps: int):
+    """min-of-reps wall clock for several thunks, measured INTERLEAVED.
+
+    The container's CPU is share-throttled, so multi-hundred-ms slowdown
+    windows come and go; timing path A fully and then path B would let one
+    window hit only one side and invert a speedup ratio.  Interleaving the
+    passes (A, B, A, B, ...) makes a window hit adjacent samples of both
+    paths, and min-of-reps then keeps each path's cleanest sample.
+    """
+    outs = {k: fn() for k, fn in fns.items()}          # compile warmup
+    best = {k: float("inf") for k in fns}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            outs[k] = fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best, outs
+
+
 def bench_fit(fast: bool = True):
     """fit + transform wall-clock, seed path vs current default, ->JSON.
 
-    ``fast`` (the --smoke / default mode) takes a single timed run per
-    point; --full medians over 3 runs of the same n grid.
+    ``fast`` (the --smoke / default mode) takes the interleaved min of 3
+    timed passes for the small points and a single pass at n=32768 to keep
+    the smoke fast; --full takes min-of-3 everywhere.
     """
-    import numpy as np
     from repro.core import gaussian, fit
     from repro.data import make_dataset
 
     rank, ell = 8, 4.0
-    reps = 1 if fast else 3  # --full medians over 3 timed runs per point
-
-    def timed(fn):
-        fn()                                               # compile warmup
-        times = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            out = fn()
-            times.append(time.perf_counter() - t0)
-        return float(np.median(times)), out
 
     rows = []
     for n in (2048, 8192, 32768):
+        # small points are noise-dominated: min-of-3 even in fast mode
+        reps = 3 if (not fast or n <= 8192) else 1
         x, _, sigma = make_dataset("pendigits", seed=0, n=n)
         ker = gaussian(sigma)
 
-        t_fit_seed, (centers, proj) = timed(
-            lambda: _seed_fit(x, ker, rank, ell))
-        t_tr_seed, _ = timed(lambda: _seed_transform(ker, centers, proj, x))
+        # transforms need fitted models: the fit thunks stash their outputs
+        # in `box`, and _timed_interleaved's warmup pass (insertion order)
+        # populates it before the transform thunks first run
+        box = {}
 
-        t_fit_new, mdl = timed(
-            lambda: fit(x, ker, rank, method="shadow", ell=ell))
-        t_tr_new, _ = timed(lambda: mdl.transform(x))
+        def seed_fit():
+            box["seed"] = _seed_fit(x, ker, rank, ell)
+            return box["seed"]
+
+        def new_fit():
+            box["mdl"] = fit(x, ker, rank, method="shadow", ell=ell)
+            return box["mdl"]
+
+        best, outs = _timed_interleaved({
+            "fit_seed": seed_fit,
+            "fit_new": new_fit,
+            "tr_seed": lambda: _seed_transform(ker, *box["seed"], x),
+            "tr_new": lambda: box["mdl"].transform(x),
+        }, reps)
+        mdl = outs["fit_new"]
 
         row = dict(
             n=n, m=mdl.m,
-            fit_seed_s=round(t_fit_seed, 4), fit_s=round(t_fit_new, 4),
-            fit_speedup=round(t_fit_seed / t_fit_new, 2),
-            transform_seed_s=round(t_tr_seed, 4),
-            transform_s=round(t_tr_new, 4),
-            transform_speedup=round(t_tr_seed / t_tr_new, 2),
+            fit_seed_s=round(best["fit_seed"], 4),
+            fit_s=round(best["fit_new"], 4),
+            fit_speedup=round(best["fit_seed"] / best["fit_new"], 2),
+            transform_seed_s=round(best["tr_seed"], 4),
+            transform_s=round(best["tr_new"], 4),
+            transform_speedup=round(best["tr_seed"] / best["tr_new"], 2),
         )
         rows.append(row)
-        emit(f"rskpca_fit_n{n}", t_fit_new * 1e6, **{
+        emit(f"rskpca_fit_n{n}", best["fit_new"] * 1e6, **{
             k: v for k, v in row.items() if k not in ("n",)})
+    # preserve any sharded/bf16 rows a previous bench_sharded appended — a
+    # plain --smoke refresh must not silently delete them — but mark them
+    # stale: their numbers were NOT re-measured this run, so the perf gate
+    # must not treat them as fresh evidence either way (bench_sharded
+    # replaces them with fresh measurements)
+    try:
+        with open(BENCH_JSON) as f:
+            rows += [dict(r, stale=True)
+                     for r in json.load(f)["rows"] if "mode" in r]
+    except (OSError, ValueError, KeyError):
+        pass
     with open(BENCH_JSON, "w") as f:
         json.dump({"bench": "rskpca_fit_transform", "rank": rank, "ell": ell,
                    "backend_default": "pallas(interpret on CPU)",
                    "rows": rows}, f, indent=2)
     print(f"# wrote {BENCH_JSON}", flush=True)
+    return rows
+
+
+_SHARD_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.core import gaussian, fit
+from repro.data import make_dataset
+from repro.launch.mesh import smoke_mesh
+from benchmarks.rskpca_scale import (_seed_fit, _seed_transform,
+                                     _timed_interleaved)
+
+precision = {precision!r}
+for n in (8192, 32768):
+    # shard count matched to the problem (~4096 rows/shard floor) so the
+    # per-shard work amortizes host shard_map overhead; a pod scales the axis
+    ndev = max(2, min(8, n // 4096))
+    mesh = smoke_mesh(ndev)
+    x, _, sigma = make_dataset("pendigits", seed=0, n=n)
+    ker = gaussian(sigma)
+    reps = 3 if n <= 8192 else 1
+    # the child re-measures the SEED baseline itself, interleaved with the
+    # sharded path, so each speedup compares samples taken seconds apart in
+    # one process (a baseline recorded minutes earlier in another process
+    # is a different machine-state); fit thunks stash outputs for the
+    # transform thunks, populated by the warmup pass
+    box = {{}}
+
+    def seed_fit():
+        box["seed"] = _seed_fit(x, ker, 8, 4.0)
+        return box["seed"]
+
+    def new_fit():
+        box["mdl"] = fit(x, ker, 8, method="shadow", ell=4.0, mesh=mesh,
+                         precision=precision)
+        return box["mdl"]
+
+    best, outs = _timed_interleaved({{
+        "fit_seed": seed_fit,
+        "fit_new": new_fit,
+        "tr_seed": lambda: _seed_transform(ker, *box["seed"], x),
+        "tr_new": lambda: box["mdl"].transform(x, mesh=mesh),
+    }}, reps)
+    print(f"SHARD n={{n}} m={{outs['fit_new'].m}} ndev={{ndev}} "
+          f"fit_seed_s={{best['fit_seed']:.4f}} fit_s={{best['fit_new']:.4f}} "
+          f"tr_seed_s={{best['tr_seed']:.4f}} tr_s={{best['tr_new']:.4f}}")
+"""
+
+
+def bench_sharded(precision: str = "bf16"):
+    """Sharded (+mixed-precision) fit/transform rows appended to the JSON.
+
+    Runs ``fit(..., mesh=...)`` / ``transform(..., mesh=...)`` in a
+    multi-host-device subprocess; the child re-measures the seed baseline
+    in-process (interleaved) so its speedups are same-machine-state ratios.
+    """
+    with open(BENCH_JSON) as f:
+        doc = json.load(f)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARD_CHILD.format(precision=precision)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        print(r.stderr[-3000:])
+        raise SystemExit("bench_sharded child failed")
+    rows = [row for row in doc["rows"] if row.get("mode") != f"sharded+{precision}"]
+    for line in r.stdout.splitlines():
+        if not line.startswith("SHARD"):
+            continue
+        kv = dict(p.split("=") for p in line.split()[1:])
+        n = int(kv["n"])
+        seed_fit_s, fit_s = float(kv["fit_seed_s"]), float(kv["fit_s"])
+        seed_tr_s, tr_s = float(kv["tr_seed_s"]), float(kv["tr_s"])
+        row = dict(
+            n=n, m=int(kv["m"]), mode=f"sharded+{precision}",
+            ndev=int(kv["ndev"]),
+            fit_seed_s=round(seed_fit_s, 4), fit_s=round(fit_s, 4),
+            fit_speedup=round(seed_fit_s / fit_s, 2),
+            transform_seed_s=round(seed_tr_s, 4),
+            transform_s=round(tr_s, 4),
+            transform_speedup=round(seed_tr_s / tr_s, 2),
+        )
+        rows.append(row)
+        emit(f"rskpca_shard_{precision}_n{n}", fit_s * 1e6, **{
+            k: v for k, v in row.items() if k != "n"})
+    doc["rows"] = rows
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# appended sharded rows to {BENCH_JSON}", flush=True)
+    return rows
 
 _CHILD = """
 import os, time

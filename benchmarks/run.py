@@ -10,21 +10,50 @@ import argparse
 import traceback
 
 
+def _assert_no_fit_regression() -> None:
+    """Perf gate: every row of BENCH_rskpca.json must report fit_speedup
+    >= 1.0 (the n=2048 small-n regression must stay gone — the autotuned
+    dense crossover of DESIGN.md §3 is what buys it)."""
+    import json
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows if not r.get("stale")]
+    bad = [r for r in fresh if r["fit_speedup"] < 1.0]
+    assert not bad, f"fit_speedup regression below 1.0x: {bad}"
+    print(f"# fit_speedup >= 1.0 across all {len(fresh)} freshly-measured "
+          f"rows", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (e.g. table2,fig6)")
     ap.add_argument("--smoke", action="store_true",
-                    help="<60s perf smoke: only the RSKPCA fit/transform "
-                         "scaling bench; writes BENCH_rskpca.json")
+                    help="fast perf smoke: only the RSKPCA fit/transform "
+                         "scaling bench; writes BENCH_rskpca.json and "
+                         "fails on any fit_speedup < 1.0")
+    ap.add_argument("--mesh", action="store_true",
+                    help="with --smoke: also bench the sharded fit/transform "
+                         "path on a multi-host-device mesh and append the "
+                         "rows to BENCH_rskpca.json")
+    ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
+                    help="precision for the --mesh sharded rows")
     args = ap.parse_args()
     fast = not args.full
+    if args.mesh and not args.smoke:
+        ap.error("--mesh requires --smoke (the sharded bench extends the "
+                 "smoke's BENCH_rskpca.json)")
 
     if args.smoke:
         from benchmarks import rskpca_scale
         print("# --- rskpca fit/transform smoke ---", flush=True)
         rskpca_scale.bench_fit(fast=True)
+        if args.mesh:
+            print("# --- sharded fit/transform ---", flush=True)
+            rskpca_scale.bench_sharded(precision=args.precision)
+        _assert_no_fit_regression()
         return
 
     from benchmarks import (table2_cost, fig23_eigenembedding,

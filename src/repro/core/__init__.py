@@ -2,8 +2,9 @@
 # the shadow density estimate (Algorithm 2), plus every baseline the paper
 # compares against and the §5 error-bound machinery.
 from repro.core.kernels_math import (  # noqa: F401
-    DEFAULT_BACKEND, Kernel, gaussian, laplacian, make_kernel, gram_matrix,
-    gram_matrix_dense, weighted_gram, pairwise_sq_dists, kde, rsde_eval,
+    DEFAULT_BACKEND, DEFAULT_PRECISION, Kernel, gaussian, laplacian,
+    make_kernel, gram_matrix, gram_matrix_dense, weighted_gram,
+    pairwise_sq_dists, kde, rsde_eval,
 )
 from repro.core.shadow import (  # noqa: F401
     shadow_select, shadow_select_np, shadow_select_host,

@@ -1,4 +1,5 @@
-"""Distributed ShDE + RSKPCA (DESIGN.md §3 — the TPU-pod adaptation).
+"""Distributed ShDE + RSKPCA (DESIGN.md §3 selection, §5 sharded
+fit/transform — the TPU-pod adaptation).
 
 The paper's Algorithm 2 is a greedy sequential scan — fine on one host,
 hostile to a 256-chip pod.  We adapt it as a two-level blocked selection:
@@ -28,38 +29,41 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.kernels_math import Kernel, gram_matrix
+from repro.core.kernels_math import Kernel, gram_matrix, gram_matrix_dense
 from repro.core.rsde import RSDE
 from repro.core import shadow as shadow_mod
+from repro.kernels import ops as kernel_ops
+from repro.kernels.ops import _pad_rows
 
 Array = jax.Array
 
 
-def _local_shadow(x_loc: Array, eps: Array, max_centers: int):
+def _local_shadow(x_loc: Array, eps: Array, max_centers: int,
+                  valid_loc: Array):
     """Level-1 selection on one device's shard. Returns padded (c, w)."""
     centers, weights, _, _ = shadow_mod.shadow_select(
-        x_loc, eps, max_centers=max_centers
+        x_loc, eps, max_centers=max_centers, valid=valid_loc
     )
     return centers, weights
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis", "max_local", "max_global"))
-def _two_level_select(x: Array, eps: Array, mesh: Mesh, axis: str,
-                      max_local: int, max_global: int):
+def _two_level_select(x: Array, valid: Array, eps: Array, mesh: Mesh,
+                      axis: str, max_local: int, max_global: int):
     """shard_map level-1 + all-gather + replicated level-2 merge."""
 
-    def level1(x_loc):
-        c, w = _local_shadow(x_loc, eps, max_centers=max_local)
+    def level1(x_loc, valid_loc):
+        c, w = _local_shadow(x_loc, eps, max_centers=max_local,
+                             valid_loc=valid_loc)
         # gather every device's candidates (m_loc is data-dependent; padded)
         all_c = jax.lax.all_gather(c, axis, tiled=True)   # (ndev*max_local, d)
         all_w = jax.lax.all_gather(w, axis, tiled=True)   # (ndev*max_local,)
         return all_c, all_w
 
-    spec_in = P(axis, None)
     all_c, all_w = shard_map(
-        level1, mesh=mesh, in_specs=(spec_in,),
+        level1, mesh=mesh, in_specs=(P(axis, None), P(axis)),
         out_specs=(P(None, None), P(None)), check_vma=False,
-    )(x)
+    )(x, valid)
     # level-2 merge is replicated (centers are tiny); weights>0 masks padding
     out_c, out_w, m = shadow_mod.two_level_merge(
         all_c, all_w, eps, max_centers=max_global
@@ -71,18 +75,23 @@ def distributed_shadow_rsde(x, kernel: Kernel, ell: float, mesh: Mesh,
                             axis: str = "data",
                             max_local: int | None = None,
                             max_global: int | None = None) -> RSDE:
-    """Two-level distributed ShDE over a device mesh axis."""
+    """Two-level distributed ShDE over a device mesh axis.
+
+    n need not divide the axis: rows are padded to a device multiple and
+    masked out of selection (they are never centers and carry no weight)."""
     ndev = mesh.shape[axis]
     x = jnp.asarray(x, jnp.float32)
     n = x.shape[0]
-    assert n % ndev == 0, f"n={n} must divide over {axis}={ndev} (pad upstream)"
-    n_loc = n // ndev
+    xp = _pad_rows(x, ndev)
+    valid = (jnp.arange(xp.shape[0]) < n)
+    n_loc = xp.shape[0] // ndev
     max_local = max_local or n_loc
-    max_global = max_global or min(n, ndev * max_local)
+    max_global = max_global or min(xp.shape[0], ndev * max_local)
     sharding = NamedSharding(mesh, P(axis, None))
-    x = jax.device_put(x, sharding)
+    xp = jax.device_put(xp, sharding)
     c, w, m = _two_level_select(
-        x, jnp.float32(kernel.epsilon(ell)), mesh, axis, max_local, max_global
+        xp, valid, jnp.float32(kernel.epsilon(ell)), mesh, axis, max_local,
+        max_global
     )
     m = int(m)
     return RSDE(
@@ -115,20 +124,189 @@ def blocked_gram_rows(x, centers, kernel: Kernel, mesh: Mesh,
     )(x, c)
 
 
-def distributed_assign(x, centers, mesh: Mesh, axis: str = "data") -> Array:
-    """Recover the data->center map alpha in one sharded pass (O(mn/devices))."""
-    x = jnp.asarray(x, jnp.float32)
-    c = jnp.asarray(centers, jnp.float32)
-
-    def block(x_loc, c_rep):
-        d2 = (
-            jnp.sum(x_loc * x_loc, 1)[:, None]
-            + jnp.sum(c_rep * c_rep, 1)[None, :]
-            - 2.0 * x_loc @ c_rep.T
-        )
-        return jnp.argmin(d2, axis=1).astype(jnp.int32)
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def _sharded_assign_jit(xp, c, v, mesh: Mesh, axis: str):
+    def block(x_loc, c_rep, v_rep):
+        return kernel_ops.shadow_assign(x_loc, c_rep, valid=v_rep)
 
     return shard_map(
-        block, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
-        out_specs=P(axis), check_vma=False,
-    )(x, c)
+        block, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(None)),
+        out_specs=(P(axis), P(axis)), check_vma=False,
+    )(xp, c, v)
+
+
+def sharded_shadow_assign(x, centers, mesh: Mesh, axis: str = "data",
+                          valid=None):
+    """Nearest-valid-center pass with x ROWS sharded over ``axis`` and the
+    center set replicated: each device runs the Pallas assignment kernel
+    (repro.kernels.shadow_assign) on its shard.  Returns (idx, d2min) like
+    ``kernel_ops.shadow_assign``; x is padded to a device multiple and
+    stripped on the way out.  Jitted (mesh/axis static) so repeated serving
+    calls at one shape reuse the compiled sharded program.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(centers, jnp.float32)
+    n, m = x.shape[0], c.shape[0]
+    ndev = mesh.shape[axis]
+    xp = _pad_rows(x, ndev)
+    v = jnp.ones((m,), jnp.float32) if valid is None \
+        else jnp.asarray(valid, jnp.float32)
+    idx, d2 = _sharded_assign_jit(xp, c, v, mesh, axis)
+    return idx[:n], d2[:n]
+
+
+def distributed_assign(x, centers, mesh: Mesh, axis: str = "data") -> Array:
+    """Recover the data->center map alpha in one sharded pass (O(mn/devices)),
+    routed through the Pallas assignment kernel per shard."""
+    idx, _ = sharded_shadow_assign(x, centers, mesh, axis=axis)
+    return idx
+
+
+def sharded_weighted_gram(centers, weights, kernel: Kernel, mesh: Mesh,
+                          axis: str = "data") -> Array:
+    """Algorithm 1's K-tilde = W K^C W with center ROWS sharded over ``axis``
+    and the center set replicated as columns — the fit-side O(m^2) assembly
+    of DESIGN.md §5.  Callers pad (centers, weights) to a device multiple
+    with zero-weight rows (sqrt(0) zeroes the padded rows/columns, so the
+    padded spectrum gains only zeros)."""
+    c = jnp.asarray(centers, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+
+    def block(c_loc, w_loc, c_rep, w_rep):
+        if kernel.backend == "pallas":
+            return kernel_ops.gram(c_loc, c_rep, sigma=kernel.sigma,
+                                   p=kernel.p, wx=w_loc, wy=w_rep,
+                                   precision=kernel.precision)
+        g = gram_matrix_dense(kernel, c_loc, c_rep)
+        return g * jnp.sqrt(w_loc)[:, None] * jnp.sqrt(w_rep)[None, :]
+
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(None, None), P(None)),
+        out_specs=P(axis, None), check_vma=False,
+    )(c, w, c, w)
+
+
+@partial(jax.jit, static_argnames=("kernel", "mesh", "axis"))
+def _sharded_wgram_jit(c, w, kernel: Kernel, mesh: Mesh, axis: str):
+    return sharded_weighted_gram(c, w, kernel, mesh, axis=axis)
+
+
+@partial(jax.jit, static_argnames=("kernel", "mesh", "axis", "chunk"))
+def _sharded_project_jit(xp, c, a, kernel: Kernel, mesh: Mesh, axis: str,
+                         chunk: int | None):
+    def block(x_loc, c_rep, a_rep):
+        if kernel.backend == "pallas":
+            return kernel_ops.kpca_project(
+                x_loc, c_rep, a_rep, sigma=kernel.sigma, p=kernel.p,
+                chunk=chunk, precision=kernel.precision)
+        return gram_matrix_dense(kernel, x_loc, c_rep) @ a_rep
+
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(None, None)),
+        out_specs=P(axis, None), check_vma=False,
+    )(xp, c, a)
+
+
+def sharded_kpca_project(x, centers, projector, kernel: Kernel, mesh: Mesh,
+                         axis: str = "data", chunk: int | None = None):
+    """Fused z = k(x, C) @ A with query ROWS sharded over ``axis`` and the
+    (m, d) centers + (m, r) projector replicated (DESIGN.md §5).  Per device
+    the fused Pallas projection kernel runs on the local shard (streamed in
+    ``chunk`` rows if given); only the (n/ndev, r) embeddings travel back.
+    Jitted (kernel/mesh/axis/chunk static) so repeated serving calls at one
+    shape reuse the compiled sharded program.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(centers, jnp.float32)
+    a = jnp.asarray(projector, jnp.float32)
+    n = x.shape[0]
+    ndev = mesh.shape[axis]
+    # pad rows to a shape BUCKET, not just a device multiple: a ragged
+    # serving stream then re-traces the sharded program once per
+    # (chunk * ndev) bucket instead of once per distinct query size — the
+    # mesh-side analogue of the single-device tail-chunk padding contract
+    if chunk is not None and n > chunk * ndev:
+        xp = _pad_rows(x, ndev * chunk)
+        eff_chunk = chunk  # per-device rows are an exact chunk multiple
+    else:
+        xp = _pad_rows(x, ndev * 128)
+        eff_chunk = None
+    z = _sharded_project_jit(xp, c, a, kernel, mesh, axis, eff_chunk)
+    return z[:n]
+
+
+@partial(jax.jit,
+         static_argnames=("kernel", "rank", "mesh", "axis", "lobpcg_min_m"))
+def _fit_rskpca_sharded(c: Array, w: Array, n: Array, kernel: Kernel,
+                        rank: int, mesh: Mesh, axis: str,
+                        lobpcg_min_m: int):
+    """Algorithm 1 with the Gram assembly sharded over center rows and, for
+    large m, the LOBPCG matvec distributed the same way — the m x m operator
+    never needs to be replicated; only the (m, r) projector is."""
+    from repro.core.rskpca import _canonicalize_signs
+
+    sw = jnp.sqrt(w)
+    kt = sharded_weighted_gram(c, w, kernel, mesh, axis=axis) / n
+    m_pad = c.shape[0]
+    if m_pad > lobpcg_min_m and 5 * rank < m_pad:
+        from jax.experimental.sparse.linalg import lobpcg_standard
+
+        def matvec(v):
+            def blk(k_loc, v_rep):
+                return jnp.dot(k_loc, v_rep,
+                               preferred_element_type=jnp.float32)
+            return shard_map(
+                blk, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
+                out_specs=P(axis, None), check_vma=False,
+            )(kt, v)
+
+        x0 = jax.random.normal(jax.random.PRNGKey(0), (m_pad, rank),
+                               kt.dtype)
+        lam, u, _ = lobpcg_standard(matvec, x0, m=100)
+        u = _canonicalize_signs(u)
+    else:
+        lam, u = jnp.linalg.eigh(kt)  # ascending
+        lam = lam[::-1][:rank]
+        u = _canonicalize_signs(u[:, ::-1][:, :rank])
+    lam = jnp.maximum(lam, 1e-12)
+    proj = (sw[:, None] * u) / jnp.sqrt(lam)[None, :] / jnp.sqrt(n)
+    return lam, proj
+
+
+def fit_rskpca_sharded(centers, weights, n: int, kernel: Kernel, rank: int,
+                       mesh: Mesh, axis: str = "data",
+                       lobpcg_min_m: int | None = None):
+    """Sharded Algorithm 1 core: returns (eigvals (rank,), projector (m, r)).
+
+    Centers are padded to a device multiple with zero-weight rows (harmless:
+    they contribute zero rows/columns to K-tilde and zero projector rows)
+    and the padding is stripped before returning.  ``lobpcg_min_m`` is a
+    test hook to force the distributed-matvec eigensolve at small m.
+
+    On CPU, small-m eigensolves hop to the same LAPACK subset driver the
+    single-device fit uses (rskpca._host_subset_eigh) — same solver on both
+    paths is what makes the 1e-5 sharded-vs-single parity hold.
+    """
+    from repro.core.rskpca import (_LOBPCG_MIN_M, _fold_projector,
+                                   _host_subset_eigh)
+
+    c = jnp.asarray(centers, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    m = c.shape[0]
+    ndev = mesh.shape[axis]
+    cp = _pad_rows(c, ndev)
+    wp = _pad_rows(w, ndev)
+    min_m = _LOBPCG_MIN_M if lobpcg_min_m is None else int(lobpcg_min_m)
+    if jax.default_backend() == "cpu" and cp.shape[0] <= min_m:
+        kt = np.asarray(_sharded_wgram_jit(cp, wp, kernel, mesh, axis)) \
+            / np.float32(n)
+        top = _host_subset_eigh(kt, rank)
+        if top is not None:
+            lam, proj = _fold_projector(*top, np.asarray(wp), n)
+            return jnp.asarray(lam), jnp.asarray(proj[:m])
+    lam, proj = _fit_rskpca_sharded(
+        cp, wp, jnp.float32(n), kernel, rank, mesh, axis, min_m)
+    return lam, proj[:m]

@@ -26,6 +26,12 @@ Array = jax.Array
 DEFAULT_BACKEND = "pallas"
 _BACKENDS = ("pallas", "dense")
 
+#: Compute precision of the Gram-shaped matmuls: "f32" everywhere, or "bf16"
+#: operands on the MXU with f32 accumulation and an f32 exp nonlinearity
+#: (DESIGN.md §3; parity tolerances in tests/test_precision.py).
+DEFAULT_PRECISION = "f32"
+_PRECISIONS = ("f32", "bf16")
+
 
 @dataclasses.dataclass(frozen=True)
 class Kernel:
@@ -35,20 +41,37 @@ class Kernel:
     this kernel (DESIGN.md §3): the fused Pallas kernels (default) or the
     dense jnp oracle.  Both are numerically interchangeable (parity-tested to
     1e-5 in tests/test_kernels.py).
+
+    ``precision`` selects the MXU operand dtype for those same ops: "f32"
+    (default) or "bf16" (half the operand bandwidth; accumulation and the
+    exp nonlinearity stay f32 — bf16-vs-f32 parity is tested with documented
+    tolerances in tests/test_precision.py).
     """
 
     name: str
     sigma: float
     p: int  # exponent of the norm (2 = Gaussian, 1 = Laplacian)
     backend: str = DEFAULT_BACKEND
+    precision: str = DEFAULT_PRECISION
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; expected one of {_BACKENDS}")
+        if self.precision not in _PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; "
+                f"expected one of {_PRECISIONS}")
+        if self.backend == "dense" and self.precision != "f32":
+            raise ValueError(
+                "the dense backend is the f32 parity oracle and does not "
+                "honor reduced precision; use backend='pallas' for bf16")
 
     def with_backend(self, backend: str) -> "Kernel":
         return dataclasses.replace(self, backend=backend)
+
+    def with_precision(self, precision: str) -> "Kernel":
+        return dataclasses.replace(self, precision=precision)
 
     @property
     def kappa(self) -> float:
@@ -88,20 +111,24 @@ class Kernel:
         return self.sigma / ell
 
 
-def gaussian(sigma: float, backend: str = DEFAULT_BACKEND) -> Kernel:
-    return Kernel(name="gaussian", sigma=float(sigma), p=2, backend=backend)
+def gaussian(sigma: float, backend: str = DEFAULT_BACKEND,
+             precision: str = DEFAULT_PRECISION) -> Kernel:
+    return Kernel(name="gaussian", sigma=float(sigma), p=2, backend=backend,
+                  precision=precision)
 
 
-def laplacian(sigma: float, backend: str = DEFAULT_BACKEND) -> Kernel:
-    return Kernel(name="laplacian", sigma=float(sigma), p=1, backend=backend)
+def laplacian(sigma: float, backend: str = DEFAULT_BACKEND,
+              precision: str = DEFAULT_PRECISION) -> Kernel:
+    return Kernel(name="laplacian", sigma=float(sigma), p=1, backend=backend,
+                  precision=precision)
 
 
-def make_kernel(name: str, sigma: float,
-                backend: str = DEFAULT_BACKEND) -> Kernel:
+def make_kernel(name: str, sigma: float, backend: str = DEFAULT_BACKEND,
+                precision: str = DEFAULT_PRECISION) -> Kernel:
     if name == "gaussian":
-        return gaussian(sigma, backend)
+        return gaussian(sigma, backend, precision)
     if name == "laplacian":
-        return laplacian(sigma, backend)
+        return laplacian(sigma, backend, precision)
     raise ValueError(f"unknown kernel {name!r}")
 
 
@@ -149,7 +176,8 @@ def gram_matrix(kernel: Kernel, x: Array, y: Array | None = None) -> Array:
     """
     if kernel.backend == "pallas":
         return _pallas_ops.gram(x, x if y is None else y,
-                                sigma=kernel.sigma, p=kernel.p)
+                                sigma=kernel.sigma, p=kernel.p,
+                                precision=kernel.precision)
     return gram_matrix_dense(kernel, x, y)
 
 
@@ -161,7 +189,8 @@ def weighted_gram(kernel: Kernel, centers: Array, weights: Array) -> Array:
     """
     if kernel.backend == "pallas":
         return _pallas_ops.weighted_gram(centers, weights,
-                                         sigma=kernel.sigma, p=kernel.p)
+                                         sigma=kernel.sigma, p=kernel.p,
+                                         precision=kernel.precision)
     kc = gram_matrix_dense(kernel, centers, centers)
     sw = jnp.sqrt(weights.astype(kc.dtype))
     return kc * sw[:, None] * sw[None, :]

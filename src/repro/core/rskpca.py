@@ -65,18 +65,32 @@ class KPCAModel:
     def rank(self) -> int:
         return self.projector.shape[1]
 
-    def transform(self, x, chunk: int = TRANSFORM_CHUNK) -> np.ndarray:
+    def transform(self, x, chunk: int = TRANSFORM_CHUNK,
+                  mesh=None, axis: str = "data") -> np.ndarray:
         """Embed query points: O(q * m * (d + r)), streamed in fixed chunks.
 
         On the Pallas backend the kernel evaluation and the projection matmul
         are fused (repro.kernels.kpca_project) — the (chunk, m) Gram block
         stays in VMEM and only the (chunk, r) embedding is written back.
+        The ragged tail chunk is padded to the fixed chunk size, so a stream
+        of arbitrary query sizes compiles exactly once (DESIGN.md §5).
+
+        ``mesh`` shards the query rows over the mesh's ``axis`` and runs the
+        fused projection per device with the (m, r) projector replicated —
+        the embarrassingly-parallel O(qm) path of DESIGN.md §5.
         """
+        if mesh is not None:
+            from repro.core import distributed as dist
+            z = dist.sharded_kpca_project(
+                x, self.centers, self.projector, self.kernel, mesh,
+                axis=axis, chunk=chunk)
+            return np.asarray(z)
         if self.kernel.backend == "pallas":
             # no host roundtrip: device-resident queries go straight through
             z = kernel_ops.kpca_project(
                 x, self.centers, self.projector,
-                sigma=self.kernel.sigma, p=self.kernel.p, chunk=chunk)
+                sigma=self.kernel.sigma, p=self.kernel.p, chunk=chunk,
+                precision=self.kernel.precision)
             return np.asarray(z)
         x = np.asarray(x, np.float32)
         chunk = x.shape[0] if chunk is None else chunk  # None = unchunked,
@@ -96,8 +110,22 @@ class KPCAModel:
 #: Kernel spectra decay fast, so it converges in a handful of iterations to
 #: ~1e-4 relative error (parity-tested in tests/test_rskpca.py); small
 #: problems keep the exact solver so all paper-parity tests run through
-#: eigh unchanged.
-_LOBPCG_MIN_M = 2048
+#: eigh unchanged.  1024 is where measured eigh cost (~0.3s, with vectors)
+#: clears LOBPCG's (~0.01s) by >10x on CPU — see BENCH_rskpca.json.
+_LOBPCG_MIN_M = 1024
+
+
+def _canonicalize_signs(vec: Array) -> Array:
+    """Flip each eigenvector so its largest-|.| component is positive.
+
+    eigh/LOBPCG sign choices are implementation details that differ between
+    padded/sharded/single-device solves of the SAME operator; pinning the
+    sign makes the sharded path bit-comparable to the single-device one
+    (tests/test_sharded.py) without affecting any sign-invariant consumer.
+    """
+    i = jnp.argmax(jnp.abs(vec), axis=0)
+    s = jnp.sign(vec[i, jnp.arange(vec.shape[1])])
+    return vec * jnp.where(s == 0, 1.0, s)[None, :]
 
 
 def _top_eigh(mat: Array, rank: int):
@@ -107,11 +135,43 @@ def _top_eigh(mat: Array, rank: int):
         from jax.experimental.sparse.linalg import lobpcg_standard
         x0 = jax.random.normal(jax.random.PRNGKey(0), (m, rank), mat.dtype)
         lam, vec, _ = lobpcg_standard(mat, x0, m=100)
-        return lam, vec  # already descending
+        return lam, _canonicalize_signs(vec)  # already descending
     lam, vec = jnp.linalg.eigh(mat)  # ascending
     lam = lam[::-1][:rank]
     vec = vec[:, ::-1][:, :rank]
-    return lam, vec
+    return lam, _canonicalize_signs(vec)
+
+
+def _host_subset_eigh(kt: np.ndarray, rank: int):
+    """Top-``rank`` eigenpairs via LAPACK's subset driver (syevr).
+
+    CPU-only fast path: computing just the top-r invariant subspace is ~5x
+    faster than the full syevd jnp.linalg.eigh at m ~ 500-1000, which is
+    the dominant fit cost at small n (BENCH_rskpca.json n=2048).  Signs are
+    canonicalized with the same rule as the device path, so all paths stay
+    comparable.  Returns None if scipy is unavailable (callers fall back to
+    the fused device fit).
+    """
+    try:
+        from scipy.linalg import eigh as _seigh
+    except ImportError:  # pragma: no cover - container ships scipy
+        return None
+    m = kt.shape[0]
+    rank = min(rank, m)  # graceful truncation, matching _top_eigh's slice
+    lam, u = _seigh(kt, subset_by_index=[m - rank, m - 1])  # ascending
+    lam = np.asarray(lam, np.float32)[::-1]
+    u = np.ascontiguousarray(np.asarray(u, np.float32)[:, ::-1])
+    # same sign rule as _canonicalize_signs, in numpy (host path stays host)
+    s = np.sign(u[np.abs(u).argmax(axis=0), np.arange(u.shape[1])])
+    return lam, u * np.where(s == 0, 1.0, s)[None, :].astype(np.float32)
+
+
+def _fold_projector(lam: np.ndarray, u: np.ndarray, w: np.ndarray, n: float):
+    """A = diag(sqrt(w)) U Lambda^{-1/2} / sqrt(n) on host (trivial cost)."""
+    lam = np.maximum(lam, 1e-12)
+    sw = np.sqrt(w.astype(np.float32))
+    proj = (sw[:, None] * u) / np.sqrt(lam)[None, :] / np.sqrt(np.float32(n))
+    return lam, proj
 
 
 @partial(jax.jit, static_argnames=("kernel", "rank"))
@@ -131,11 +191,35 @@ def _fit_rskpca_device(c: Array, w: Array, n: Array, kernel: Kernel,
     return lam, proj
 
 
-def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int) -> KPCAModel:
-    """Algorithm 1: weighted m x m Gram, eigh, fold weights into projector."""
+def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int,
+               mesh=None, axis: str = "data") -> KPCAModel:
+    """Algorithm 1: weighted m x m Gram, eigh, fold weights into projector.
+
+    With ``mesh``, the m x m weighted Gram assembly is sharded over center
+    ROWS (columns replicated) and the large-m eigensolve runs LOBPCG with a
+    row-distributed matvec — only the (m, r) projector is ever replicated
+    (DESIGN.md §5).  The result matches the single-device fit to fp noise.
+    """
     c = jnp.asarray(rsde.centers, jnp.float32)
     w = jnp.asarray(rsde.weights, jnp.float32)
-    lam, proj = _fit_rskpca_device(c, w, jnp.float32(rsde.n), kernel, rank)
+    if mesh is not None:
+        from repro.core import distributed as dist
+        lam, proj = dist.fit_rskpca_sharded(c, w, rsde.n, kernel, rank,
+                                            mesh, axis=axis)
+    elif (jax.default_backend() == "cpu" and c.shape[0] <= _LOBPCG_MIN_M):
+        # CPU dispatch: fused Gram on device, then the LAPACK subset
+        # eigensolve on host — 2x the end-to-end fit at m ~ 500 vs keeping
+        # the full eigh inside the jit.  TPU keeps the fused single-jit fit.
+        kt = np.asarray(weighted_gram(kernel, c, w)) / np.float32(rsde.n)
+        top = _host_subset_eigh(kt, rank)
+        if top is None:
+            lam, proj = _fit_rskpca_device(c, w, jnp.float32(rsde.n),
+                                           kernel, rank)
+        else:
+            lam, proj = _fold_projector(*top, np.asarray(w), rsde.n)
+    else:
+        lam, proj = _fit_rskpca_device(c, w, jnp.float32(rsde.n), kernel,
+                                       rank)
     return KPCAModel(
         kernel=kernel,
         centers=np.asarray(rsde.centers, np.float32),
@@ -178,22 +262,43 @@ def fit_subsampled_kpca(x, kernel: Kernel, rank: int, m: int,
 
 def fit(x, kernel: Kernel, rank: int, *, method: str = "shadow",
         ell: float | None = None, m: int | None = None,
-        backend: str | None = None, **kw) -> KPCAModel:
+        backend: str | None = None, precision: str | None = None,
+        mesh=None, axis: str = "data", **kw) -> KPCAModel:
     """One-call front door: RSDE scheme name, 'kpca', or 'uniform'.
 
     ``backend`` overrides the kernel's compute path ("pallas" | "dense") for
     this fit and the returned model — the parity-testing switch of
-    DESIGN.md §3.
+    DESIGN.md §3.  ``precision`` overrides the MXU operand dtype the same
+    way ("f32" | "bf16").  ``mesh`` runs selection (two-level distributed
+    ShDE), the Gram assembly, and the eigensolve sharded over the mesh's
+    ``axis`` (DESIGN.md §5); the returned model's ``transform`` accepts the
+    same ``mesh=`` for sharded serving.
     """
     if backend is not None:
         kernel = kernel.with_backend(backend)
-    if method == "kpca":
-        return fit_kpca(x, kernel, rank)
-    if method == "uniform":
+    if precision is not None:
+        kernel = kernel.with_precision(precision)
+    if method in ("kpca", "uniform"):
+        if mesh is not None:
+            raise ValueError(
+                f"method={method!r} is a deliberately single-device "
+                "baseline and ignores mesh=; use an RSDE method for the "
+                "sharded pipeline")
+        if method == "kpca":
+            return fit_kpca(x, kernel, rank)
         assert m is not None
         return fit_subsampled_kpca(x, kernel, rank, m, **kw)
+    if mesh is not None and method == "shadow":
+        assert ell is not None, "shadow RSDE is parameterized by ell"
+        from repro.core import distributed as dist
+        # **kw forwards so distributed selection kwargs (max_local,
+        # max_global) work and unsupported single-device selector kwargs
+        # raise instead of being silently dropped
+        rsde = dist.distributed_shadow_rsde(x, kernel, ell, mesh, axis=axis,
+                                            **kw)
+        return fit_rskpca(rsde, kernel, rank, mesh=mesh, axis=axis)
     rsde = make_rsde(method, x, kernel, ell=ell, m=m, **kw)
-    return fit_rskpca(rsde, kernel, rank)
+    return fit_rskpca(rsde, kernel, rank, mesh=mesh, axis=axis)
 
 
 def embedding_alignment_error(ref: np.ndarray, approx: np.ndarray) -> float:

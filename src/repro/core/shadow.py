@@ -56,18 +56,21 @@ def shadow_select_np(x: np.ndarray, eps: float):
 
 
 @partial(jax.jit, static_argnames=("max_centers",))
-def shadow_select(x: Array, eps: Array, max_centers: int):
+def shadow_select(x: Array, eps: Array, max_centers: int, valid=None):
     """Jittable Algorithm 2.
 
     Args:
       x: (n, d) data.
       eps: shadow radius sigma/ell.
       max_centers: static bound on m (use n for exactness).
+      valid: optional (n,) bool mask — False rows are padding: never
+        selected, never counted (the distributed path pads n to a device
+        multiple and masks the tail).
 
     Returns:
       centers: (max_centers, d), zero-padded beyond m.
-      weights: (max_centers,) float32, zero beyond m.  sum == n.
-      assign:  (n,) int32 data->center map (alpha in §5).
+      weights: (max_centers,) float32, zero beyond m.  sum == #valid.
+      assign:  (n,) int32 data->center map (alpha in §5); -1 on padding.
       m:       int32 number of centers actually selected.
     """
     n, d = x.shape
@@ -102,7 +105,7 @@ def shadow_select(x: Array, eps: Array, max_centers: int):
         return alive, centers, weights, assign, m + 1
 
     state = (
-        jnp.ones(n, dtype=bool),
+        jnp.ones(n, dtype=bool) if valid is None else valid.astype(bool),
         jnp.zeros((max_centers, d), jnp.float32),
         jnp.zeros((max_centers,), jnp.float32),
         jnp.full((n,), -1, jnp.int32),
@@ -121,82 +124,156 @@ def shadow_select_host(x, eps: float):
 
 
 @partial(jax.jit, static_argnames=("block",))
-def _blocked_round(xf: Array, alive: Array, eps2: Array, block: int):
-    """One round of blocked selection (all-device, no host sync inside).
+def _blocked_select_device(xf: Array, eps2: Array, block: int,
+                           alive0: Array, stop_count: Array):
+    """Blocked-selection rounds fused in ONE device while_loop, running
+    until the alive set drops to ``stop_count`` (0 = exhaust it).
 
-    1. Gather the first ``block`` still-alive points (in index order) as the
+    ``alive0`` lets the caller mark padding rows dead up front (the
+    compaction cascade in ``shadow_select_blocked`` pads the shrunken alive
+    set to a power of two so re-jits stay bounded).
+
+    Per round (the old per-round host loop paid a host sync + numpy
+    conversion per round — fusing the loop cut n=32k selection ~2x):
+
+    1. Gather the first ``block`` still-alive points (index order) as the
        candidate batch.
     2. Prune the batch to the greedy prefix-independent subset: candidate j
        is KEPT iff it is >= eps from every kept candidate before it — the
        same rule sequential Algorithm 2 applies, restricted to the batch.
     3. Absorb: one Pallas nearest-center pass of ALL points against the kept
        candidates; any alive point strictly within eps joins the shadow of
-       its nearest kept candidate.
+       its nearest kept candidate.  Keepers scatter into the preallocated
+       (n, d) center buffer at positions m + rank (invalid slots dropped).
 
     Every alive candidate leaves the alive set each round (kept ones absorb
     themselves; dropped ones are within eps of the keeper that shadowed
     them), so the round count is <= ceil(m/1) and typically ~m/B.
     """
-    n = xf.shape[0]
+    n, d = xf.shape
     iota = jnp.arange(n)
-    # indices of the first `block` alive points (dead points sort last)
-    order = jnp.argsort(jnp.where(alive, iota, n + iota))
-    cand_idx = order[:block]
-    cand_alive = alive[cand_idx]
-    cand = xf[cand_idx]                                    # (B, d)
-    d2c = jnp.sum((cand[:, None, :] - cand[None, :, :]) ** 2, axis=-1)
 
-    def pick(j, keep):
-        sep = jnp.all(jnp.where(keep, d2c[:, j] >= eps2, True))
-        return keep.at[j].set(cand_alive[j] & sep)
+    def round_core(alive):
+        # indices of the first `block` alive points (dead points sort last)
+        order = jnp.argsort(jnp.where(alive, iota, n + iota))
+        cand_idx = order[:block]
+        cand_alive = alive[cand_idx]
+        cand = xf[cand_idx]                                # (B, d)
+        d2c = jnp.sum((cand[:, None, :] - cand[None, :, :]) ** 2, axis=-1)
 
-    keep = jax.lax.fori_loop(0, block, pick, jnp.zeros((block,), bool))
+        def pick(j, keep):
+            sep = jnp.all(jnp.where(keep, d2c[:, j] >= eps2, True))
+            return keep.at[j].set(cand_alive[j] & sep)
 
-    idx, d2min = kernel_ops.shadow_assign(
-        xf, cand, valid=keep.astype(jnp.float32))
-    # Candidate rows must resolve against the batch via the direct-difference
-    # d2c, which is exact at zero distance: the assign kernel's expansion form
-    # rounds off near zero, and at tiny eps a keeper could then fail to absorb
-    # even itself and the round would never make progress.  This also
-    # guarantees every alive candidate leaves the alive set each round (a
-    # dropped candidate is, by the pick rule, within eps of some keeper).
-    d2c_kept = jnp.where(keep[:, None], d2c, jnp.inf)      # (B, B)
-    idx = idx.at[cand_idx].set(jnp.argmin(d2c_kept, axis=0).astype(idx.dtype))
-    d2min = d2min.at[cand_idx].set(jnp.min(d2c_kept, axis=0))
-    absorbed = alive & (d2min < eps2)
-    counts = jnp.zeros((block,), jnp.float32).at[idx].add(
-        jnp.where(absorbed, 1.0, 0.0))
-    kept_rank = jnp.cumsum(keep) - 1                       # rank among kept
-    return cand, keep, counts, idx, absorbed, kept_rank, alive & ~absorbed
+        keep = jax.lax.fori_loop(0, block, pick, jnp.zeros((block,), bool))
+
+        idx, d2min = kernel_ops.shadow_assign(
+            xf, cand, valid=keep.astype(jnp.float32))
+        # Candidate rows must resolve against the batch via the
+        # direct-difference d2c, which is exact at zero distance: the assign
+        # kernel's expansion form rounds off near zero, and at tiny eps a
+        # keeper could then fail to absorb even itself and the round would
+        # never make progress.  This also guarantees every alive candidate
+        # leaves the alive set each round (a dropped candidate is, by the
+        # pick rule, within eps of some keeper).
+        d2c_kept = jnp.where(keep[:, None], d2c, jnp.inf)  # (B, B)
+        idx = idx.at[cand_idx].set(
+            jnp.argmin(d2c_kept, axis=0).astype(idx.dtype))
+        d2min = d2min.at[cand_idx].set(jnp.min(d2c_kept, axis=0))
+        absorbed = alive & (d2min < eps2)
+        counts = jnp.zeros((block,), jnp.float32).at[idx].add(
+            jnp.where(absorbed, 1.0, 0.0))
+        kept_rank = jnp.cumsum(keep) - 1                   # rank among kept
+        return cand, keep, counts, idx, absorbed, kept_rank
+
+    def cond(state):
+        alive = state[0]
+        return alive.any() & (alive.sum(dtype=jnp.int32) > stop_count)
+
+    def body(state):
+        alive, centers, weights, assign, m = state
+        cand, keep, counts, idx, absorbed, kept_rank = round_core(alive)
+        pos = jnp.where(keep, m + kept_rank, n)  # n = out-of-bounds: dropped
+        centers = centers.at[pos].set(cand, mode="drop")
+        weights = weights.at[pos].set(counts, mode="drop")
+        assign = jnp.where(absorbed,
+                           (m + kept_rank[idx]).astype(jnp.int32), assign)
+        alive = alive & ~absorbed
+        return alive, centers, weights, assign, \
+            m + keep.sum(dtype=jnp.int32)
+
+    state = (
+        alive0,
+        jnp.zeros((n, d), jnp.float32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.full((n,), -1, jnp.int32),
+        jnp.asarray(0, jnp.int32),
+    )
+    alive, centers, weights, assign, m = jax.lax.while_loop(cond, body, state)
+    return alive, centers, weights, assign, m
 
 
-def shadow_select_blocked(x, eps: float, block: int = 256):
-    """Blocked Algorithm 2: ~m/B sequential rounds instead of m iterations.
+def _pow2_ceil(v: int) -> int:
+    return 1 << max(v - 1, 0).bit_length()
+
+
+def shadow_select_blocked(x, eps: float, block: int | None = None):
+    """Blocked Algorithm 2: ~m/B sequential rounds instead of m iterations,
+    fused in device while_loops (no per-round host sync).
+
+    Work efficiency: every round's absorption pass costs O(alive_now * B),
+    but late rounds mostly revisit dead points if the loop keeps the full
+    array.  So the device loop runs until the alive set HALVES, the host
+    compacts the survivors (padded to a power of two so re-jit count stays
+    logarithmic), and selection resumes on the smaller array — total
+    absorption work drops from rounds*n to ~2x the first phase.
 
     Returns (centers (m, d), weights (m,), assign (n,), m) exactly like
     ``shadow_select_host``.  The center SET differs from the sequential order
     (points absorb to their NEAREST keeper, not the first), but all cover
     invariants hold: strict eps-cover, weights partition n, centers pairwise
-    >= eps apart.
+    >= eps apart (a later-phase candidate was, by construction, never within
+    eps of any earlier keeper).
     """
-    xf = jnp.asarray(x, jnp.float32)
-    n = xf.shape[0]
-    block = max(1, min(block, n))
+    x_np = np.asarray(x, np.float32)
+    n = x_np.shape[0]
+    block = 256 if block is None else block
     eps2 = jnp.asarray(eps, jnp.float32) ** 2
-    alive = jnp.ones((n,), bool)
     assign = np.full((n,), -1, np.int64)
-    centers, weights = [], []
+    centers_out, weights_out = [], []
     m = 0
-    while bool(alive.any()):
-        cand, keep, counts, idx, absorbed, kept_rank, alive = _blocked_round(
-            xf, alive, eps2, block)
-        kept = np.flatnonzero(np.asarray(keep))
-        centers.append(np.asarray(cand)[kept])
-        weights.append(np.asarray(counts)[kept])
-        ab = np.asarray(absorbed)
-        assign[ab] = m + np.asarray(kept_rank)[np.asarray(idx)[ab]]
-        m += len(kept)
-    return (np.concatenate(centers), np.concatenate(weights).astype(np.float64),
+    cur_x = x_np                    # padded working set
+    cur_orig = np.arange(n)         # padded-row -> original-row map
+    cur_alive = np.ones((n,), bool)
+    while cur_alive.any():
+        b = max(1, min(block, cur_x.shape[0]))
+        n_alive = int(cur_alive.sum())
+        alive, c, w, a, mm = _blocked_select_device(
+            jnp.asarray(cur_x), eps2, b, jnp.asarray(cur_alive),
+            jnp.asarray(n_alive // 2, jnp.int32))
+        mm = int(mm)
+        a = np.asarray(a)
+        absorbed = a >= 0
+        assign[cur_orig[absorbed]] = m + a[absorbed]
+        centers_out.append(np.asarray(c[:mm]))
+        weights_out.append(np.asarray(w[:mm]))
+        m += mm
+        still = np.flatnonzero(np.asarray(alive))
+        if still.size == 0:
+            break
+        # compact survivors; pad to a power of two with dead zero rows so
+        # the number of distinct jit shapes stays logarithmic
+        npad = _pow2_ceil(still.size)
+        nxt = np.zeros((npad, x_np.shape[1]), np.float32)
+        nxt[: still.size] = cur_x[still]
+        cur_x = nxt
+        nxt_orig = np.zeros((npad,), np.int64)
+        nxt_orig[: still.size] = cur_orig[still]
+        cur_orig = nxt_orig
+        cur_alive = np.zeros((npad,), bool)
+        cur_alive[: still.size] = True
+    return (np.concatenate(centers_out),
+            np.concatenate(weights_out).astype(np.float64),
             assign, m)
 
 

@@ -1,0 +1,158 @@
+"""Measured compute-plan autotuner for the Gram-shaped kernels (DESIGN.md §3).
+
+``pick_gram_blocks`` in ``ops.py`` is a static VMEM heuristic; it knows
+nothing about the Pallas interpret/grid overhead that dominates small
+problems off-TPU (the n=2048 fit regression in BENCH_rskpca.json), nor about
+which tile shape actually wins on a given backend.  This module replaces the
+heuristic with a tiny measured tuner:
+
+  * each op asks for a plan under a key ``(op, n-bucket, m-bucket, d,
+    precision, backend)`` — buckets are power-of-two ceilings so nearby
+    shapes share one measurement;
+  * the first request per key times every legal candidate (one warmup for
+    compile, then best-of-``_REPS``) and records the winner;
+  * winners are cached in-process and persisted to disk (JSON), so a process
+    pays each measurement at most once and a machine at most once.
+
+Candidates always include the Pallas kernel (tuned tiles) and, below a size
+cap, a dense-jnp fallback — the crossover that stops small problems from
+paying Pallas interpret/grid overhead.  ``REPRO_AUTOTUNE=0`` disables
+measurement entirely and falls back to a deterministic size heuristic
+(useful for tests that assert compile counts).  ``REPRO_AUTOTUNE_CACHE``
+overrides the on-disk cache location.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable
+
+_LOCK = threading.RLock()
+_MEM: dict[str, dict] = {}     # key -> {"winner": name, "us": {name: micros}}
+_DISK_LOADED = False
+
+#: Dense fallback is only a candidate (and the heuristic only picks it) below
+#: this many output cells — beyond it the dense path's n x m intermediates
+#: stop fitting comfortably in memory and the blocked kernel always wins.
+DENSE_MAX_CELLS = 1 << 25
+
+#: Deterministic crossover used when measurement is disabled or fails:
+#: off-TPU (interpret mode) the grid loop overhead makes dense win far later
+#: than on real hardware.
+HEURISTIC_DENSE_CELLS_INTERPRET = 1 << 22
+HEURISTIC_DENSE_CELLS_TPU = 1 << 14
+
+_REPS = 2
+
+
+def measurement_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def _cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    # repo root: src/repro/kernels/autotune.py -> three levels up from src/
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, ".autotune_cache.json")
+
+
+def bucket(v: int, lo: int = 128, hi: int = 1 << 17) -> int:
+    """Power-of-two ceiling clipped to [lo, hi]: nearby shapes share a key."""
+    v = max(int(v), 1)
+    b = 1 << (v - 1).bit_length()
+    return max(lo, min(b, hi))
+
+
+def _load_disk() -> None:
+    global _DISK_LOADED
+    if _DISK_LOADED:
+        return
+    _DISK_LOADED = True
+    try:
+        with open(_cache_path()) as f:
+            disk = json.load(f)
+        for k, v in disk.items():
+            _MEM.setdefault(k, v)
+    except (OSError, ValueError):
+        pass
+
+
+def _save_disk() -> None:
+    path = _cache_path()
+    try:
+        # merge with whatever is on disk (a concurrent process may have
+        # persisted other keys since we loaded) — our measurements win ties
+        merged: dict[str, dict] = {}
+        try:
+            with open(path) as f:
+                merged.update(json.load(f))
+        except (OSError, ValueError):
+            pass
+        merged.update(_MEM)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + f".tmp{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: in-process cache still works
+
+
+def clear(in_memory_only: bool = True) -> None:
+    """Drop cached plans (tests)."""
+    global _DISK_LOADED
+    with _LOCK:
+        _MEM.clear()
+        _DISK_LOADED = in_memory_only  # True: don't re-read disk either
+
+
+def best(key: str, candidates: dict[str, Callable[[], object]],
+         default: str) -> str:
+    """Winner for ``key``: cached if known, else measured once and persisted.
+
+    ``candidates`` maps name -> thunk running that plan on bucket-shaped
+    synthetic data (the thunk must block until the result is ready).  A thunk
+    that raises is disqualified.  With a single candidate, or measurement
+    disabled, no timing happens.
+    """
+    if not measurement_enabled():
+        return default
+    with _LOCK:
+        _load_disk()
+        hit = _MEM.get(key)
+        if hit is not None and hit.get("winner") in candidates:
+            return hit["winner"]
+        if len(candidates) == 1:
+            return next(iter(candidates))
+        times: dict[str, float] = {}
+        for name, thunk in candidates.items():
+            try:
+                thunk()  # compile warmup
+                t = []
+                for _ in range(_REPS):
+                    t0 = time.perf_counter()
+                    thunk()
+                    t.append(time.perf_counter() - t0)
+                times[name] = min(t) * 1e6
+            except Exception:
+                continue
+        if not times:
+            return default
+        winner = min(times, key=times.get)
+        _MEM[key] = {"winner": winner,
+                     "us": {k: round(v, 1) for k, v in times.items()}}
+        _save_disk()
+        return winner
+
+
+def heuristic_plan(n: int, m: int, interpret: bool) -> str:
+    """Deterministic dense/pallas crossover for when measurement is off."""
+    cells = n * m
+    cap = (HEURISTIC_DENSE_CELLS_INTERPRET if interpret
+           else HEURISTIC_DENSE_CELLS_TPU)
+    return "dense" if cells <= min(cap, DENSE_MAX_CELLS) else "pallas"

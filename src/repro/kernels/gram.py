@@ -31,13 +31,18 @@ def _gram_kernel(x_ref, y_ref, wx_ref, wy_ref, o_ref, *, sigma: float, p: int,
 
     K-chunking keeps large-d working sets inside VMEM without shrinking the
     output tile — at d=4096 this raises arithmetic intensity from 31.5 (the
-    128x128 fallback tile) to ~117 FLOP/byte (EXPERIMENTS.md §Perf-RSKPCA).
+    128x128 fallback tile) to ~117 FLOP/byte (the P2 table in
+    benchmarks/rskpca_scale.py).
     """
     k = pl.program_id(2)
-    x = x_ref[...].astype(jnp.float32)  # (bn, dk)
-    y = y_ref[...].astype(jnp.float32)  # (bm, dk)
-    xx = jnp.sum(x * x, axis=-1, keepdims=True)          # (bn, 1)
-    yy = jnp.sum(y * y, axis=-1, keepdims=True).T        # (1, bm)
+    # mixed precision: bf16 inputs go to the MXU as-is (half the operand
+    # bandwidth); norms, accumulation, and the nonlinearity stay f32
+    x = x_ref[...]                      # (bn, dk) f32 or bf16
+    y = y_ref[...]                      # (bm, dk)
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    xx = jnp.sum(xf * xf, axis=-1, keepdims=True)        # (bn, 1)
+    yy = jnp.sum(yf * yf, axis=-1, keepdims=True).T      # (1, bm)
     cross = jax.lax.dot_general(
         x, y, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,

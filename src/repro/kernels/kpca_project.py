@@ -21,11 +21,15 @@ Array = jax.Array
 
 
 def _project_kernel(x_ref, c_ref, a_ref, o_ref, *, sigma: float, p: int):
-    x = x_ref[...].astype(jnp.float32)   # (bn, d)
-    c = c_ref[...].astype(jnp.float32)   # (m, d)
+    # mixed precision: bf16 x/c go to the MXU as-is; norms, the distance
+    # accumulation, and the exp nonlinearity stay f32 (DESIGN.md §3)
+    x = x_ref[...]                       # (bn, d) f32 or bf16
+    c = c_ref[...]                       # (m, d)
     a = a_ref[...].astype(jnp.float32)   # (m, r)
-    xx = jnp.sum(x * x, axis=-1, keepdims=True)
-    cc = jnp.sum(c * c, axis=-1, keepdims=True).T
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    xx = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    cc = jnp.sum(cf * cf, axis=-1, keepdims=True).T
     cross = jax.lax.dot_general(
         x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
     )
@@ -36,9 +40,10 @@ def _project_kernel(x_ref, c_ref, a_ref, o_ref, *, sigma: float, p: int):
         s = jnp.sqrt(d2) / sigma
     else:
         s = d2 ** (p / 2.0) / sigma**p
-    g = jnp.exp(-s)                       # (bn, m)
+    g = jnp.exp(-s)                       # (bn, m) f32
     o_ref[...] = jnp.dot(
-        g, a, preferred_element_type=jnp.float32
+        g.astype(x.dtype), a.astype(x.dtype),
+        preferred_element_type=jnp.float32,
     ).astype(o_ref.dtype)
 
 

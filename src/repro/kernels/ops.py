@@ -1,10 +1,20 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Responsibilities:
+Responsibilities (DESIGN.md §3):
   * pad inputs to block multiples (and mask/strip on the way out);
-  * pick block sizes from a VMEM budget (v5e ~16 MB/core; we budget 8 MB);
+  * pick a compute plan per call via the measured autotuner in
+    ``repro.kernels.autotune``: the Pallas kernel (tuned tiles) above the
+    crossover, a dense-jnp fallback below it so small problems stop paying
+    Pallas interpret/grid overhead;
+  * mixed precision: ``precision="bf16"`` feeds bf16 operands to the MXU
+    matmuls while the distance accumulation and the exp nonlinearity stay
+    f32;
   * dispatch: real pallas on TPU, interpret=True elsewhere (this container is
     CPU-only, so interpret mode is also what the tests exercise).
+
+``plan=`` forces a path explicitly ("pallas" | "pallas_fat" | "dense");
+tests use it to keep the kernel bodies exercised regardless of what the
+autotuner would pick.
 """
 from __future__ import annotations
 
@@ -12,8 +22,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.kernels import autotune
 from repro.kernels import gram as _gram
 from repro.kernels import shadow_assign as _assign
 from repro.kernels import kpca_project as _project
@@ -21,6 +31,8 @@ from repro.kernels import kpca_project as _project
 Array = jax.Array
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+_PRECISIONS = ("f32", "bf16")
 
 
 def _on_tpu() -> bool:
@@ -40,14 +52,25 @@ def _pad_rows(a: Array, mult: int, value: float = 0.0) -> Array:
     return jnp.pad(a, widths, constant_values=value)
 
 
+def _compute_dtype(precision: str):
+    if precision not in _PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {_PRECISIONS}")
+    return jnp.bfloat16 if precision == "bf16" else jnp.float32
+
+
 def pick_gram_blocks(d: int, budget: int = _VMEM_BUDGET_BYTES):
     """(bn, bm, bk): output tile + K-chunk so the working set
     (bn*bk + bm*bk + bn*bm) * 4B fits the VMEM budget.
 
     K-chunking (accumulating partial distances over feature chunks) keeps
     the 512x512 output tile at ANY d - without it d=4096 forced 128x128
-    tiles and dropped arithmetic intensity to ~31 FLOP/byte (see
-    EXPERIMENTS.md Perf-RSKPCA)."""
+    tiles and dropped arithmetic intensity to ~31 FLOP/byte (the P2 table in
+    benchmarks/rskpca_scale.py reports the per-d numbers).
+
+    This is the VMEM-safety baseline the autotuner starts from; the measured
+    plan (repro.kernels.autotune) may instead pick fatter interpret-mode
+    tiles or the dense fallback."""
     for b in (512, 256, 128):
         for bk in (min(d, 512), 256, 128):
             if bk > d:
@@ -55,6 +78,161 @@ def pick_gram_blocks(d: int, budget: int = _VMEM_BUDGET_BYTES):
             if (2 * b * bk + b * b) * 4 <= budget:
                 return b, b, bk
     return 128, 128, 128
+
+
+def _fat_gram_blocks(d: int):
+    """Interpret-mode tiles: off-TPU there is no VMEM limit and the grid
+    loop itself is the overhead, so take far fewer, fatter row tiles."""
+    return 2048, 512, min(512, _round_up(d, 128))
+
+
+# --------------------------------------------------------------------------
+# dense-jnp fallbacks (the below-crossover plan; also honor bf16 operands)
+# --------------------------------------------------------------------------
+
+
+def _dist_pow(d2: Array, p: int) -> Array:
+    if p == 2:
+        return d2
+    if p == 1:
+        return jnp.sqrt(d2)
+    return d2 ** (p / 2.0)
+
+
+def _dense_sq_dists(x: Array, y: Array, precision: str) -> Array:
+    """f32 norms + (optionally bf16) MXU cross term, f32 accumulation."""
+    cd = _compute_dtype(precision)
+    xx = jnp.sum(x * x, axis=-1, keepdims=True)
+    yy = jnp.sum(y * y, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(
+        x.astype(cd), y.astype(cd), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.maximum(xx + yy - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "p", "weighted", "precision"))
+def _gram_dense(x, y, wx, wy, *, sigma, p, weighted, precision):
+    d2 = _dense_sq_dists(x, y, precision)
+    g = jnp.exp(-_dist_pow(d2, p) / sigma**p)
+    if weighted:
+        g = g * jnp.sqrt(wx)[:, None] * jnp.sqrt(wy)[None, :]
+    return g
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _assign_dense(x, c, valid):
+    d2 = _dense_sq_dists(x, c, "f32")  # assignment always resolves in f32
+    d2 = jnp.where(valid[None, :] > 0.0, d2, jnp.inf)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "precision"))
+def _project_dense(x, c, a, *, sigma, p, precision):
+    cd = _compute_dtype(precision)
+    d2 = _dense_sq_dists(x, c, precision)
+    g = jnp.exp(-_dist_pow(d2, p) / sigma**p)  # nonlinearity stays f32
+    return jax.lax.dot_general(
+        g.astype(cd), a.astype(cd), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# --------------------------------------------------------------------------
+# autotuned plan selection
+# --------------------------------------------------------------------------
+
+
+#: Plan measurement runs on shapes clamped to this many rows: beyond it the
+#: relative ranking of candidates is stable, and an unclamped measurement at
+#: a 64k-row bucket would cost a full Gram just to pick tiles.
+_MEASURE_MAX_ROWS = 8192
+
+
+def _bench_rows(n: int, d: int) -> Array:
+    # deterministic synthetic operands for plan measurement (values are
+    # irrelevant to timing; arange avoids a PRNG compile)
+    n = min(n, _MEASURE_MAX_ROWS)
+    return (jnp.arange(n * d, dtype=jnp.float32) % 977.0
+            ).reshape(n, d) / 977.0
+
+
+def _gram_plan(n: int, m: int, d: int, precision: str, interpret: bool):
+    """Returns ("dense", None) or ("pallas", (bn, bm, bk))."""
+    nb, mb = autotune.bucket(n), autotune.bucket(m)
+    db = autotune.bucket(d, lo=8, hi=8192)
+    mode = "interp" if interpret else "tpu"
+    if not autotune.measurement_enabled():
+        kind = autotune.heuristic_plan(n, m, interpret)
+        return ((kind, None) if kind == "dense"
+                else ("pallas", pick_gram_blocks(d)))
+    key = f"gram|n{nb}|m{mb}|d{db}|{precision}|{mode}"
+    x, y = _bench_rows(nb, db), _bench_rows(mb, db)
+
+    def run(plan):
+        return lambda: jax.block_until_ready(gram(
+            x, y, sigma=1.0, p=2, interpret=interpret,
+            precision=precision, plan=plan))
+
+    cands = {"pallas": run("pallas")}
+    if interpret:
+        cands["pallas_fat"] = run("pallas_fat")
+    if nb * mb <= autotune.DENSE_MAX_CELLS:
+        cands["dense"] = run("dense")
+    winner = autotune.best(key, cands, default="pallas")
+    if winner == "dense":
+        return "dense", None
+    blocks = _fat_gram_blocks(d) if winner == "pallas_fat" \
+        else pick_gram_blocks(d)
+    return "pallas", blocks
+
+
+def _assign_plan(n: int, m: int, d: int, interpret: bool) -> str:
+    nb, mb = autotune.bucket(n), autotune.bucket(m)
+    db = autotune.bucket(d, lo=8, hi=8192)
+    if not autotune.measurement_enabled():
+        return autotune.heuristic_plan(n, m, interpret)
+    mode = "interp" if interpret else "tpu"
+    key = f"assign|n{nb}|m{mb}|d{db}|{mode}"
+    x, c = _bench_rows(nb, db), _bench_rows(mb, db)
+
+    def run(plan):
+        return lambda: jax.block_until_ready(shadow_assign(
+            x, c, interpret=interpret, plan=plan)[1])
+
+    cands = {"pallas": run("pallas")}
+    if nb * mb <= autotune.DENSE_MAX_CELLS:
+        cands["dense"] = run("dense")
+    return autotune.best(key, cands, default="pallas")
+
+
+def _project_plan(n: int, m: int, d: int, r: int, precision: str,
+                  interpret: bool) -> str:
+    nb, mb = autotune.bucket(n), autotune.bucket(m)
+    db = autotune.bucket(d, lo=8, hi=8192)
+    rb = autotune.bucket(r, lo=8, hi=512)
+    if not autotune.measurement_enabled():
+        return autotune.heuristic_plan(n, m, interpret)
+    mode = "interp" if interpret else "tpu"
+    key = f"project|n{nb}|m{mb}|d{db}|r{rb}|{precision}|{mode}"
+    x, c = _bench_rows(nb, db), _bench_rows(mb, db)
+    a = _bench_rows(mb, rb)
+
+    def run(plan):
+        return lambda: jax.block_until_ready(kpca_project(
+            x, c, a, sigma=1.0, p=2, interpret=interpret,
+            precision=precision, plan=plan))
+
+    cands = {"pallas": run("pallas")}
+    if nb * mb <= autotune.DENSE_MAX_CELLS:
+        cands["dense"] = run("dense")
+    return autotune.best(key, cands, default="pallas")
+
+
+# --------------------------------------------------------------------------
+# gram
+# --------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "p", "interpret",
@@ -66,14 +244,37 @@ def _gram_call(xp, yp, wxp, wyp, *, sigma, p, interpret, bn, bm, bk):
 
 
 def gram(x, y, *, sigma: float, p: int = 2, wx=None, wy=None,
-         interpret: bool | None = None) -> Array:
-    """(Weighted) Gram matrix via the Pallas kernel; pads and strips."""
+         interpret: bool | None = None, precision: str = "f32",
+         plan: str | None = None) -> Array:
+    """(Weighted) Gram matrix; pads and strips.
+
+    ``plan=None`` consults the autotuner (Pallas with tuned tiles vs the
+    dense fallback); ``precision="bf16"`` runs the cross-term matmul on bf16
+    operands with f32 accumulation (parity tolerances documented in
+    tests/test_precision.py).
+    """
     if interpret is None:
         interpret = not _on_tpu()
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     n, m = x.shape[0], y.shape[0]
-    bn, bm, bk = pick_gram_blocks(x.shape[1])
+    blocks = None
+    if plan is None:
+        plan, blocks = _gram_plan(n, m, x.shape[1], precision, interpret)
+    if plan == "dense":
+        ones_n = jnp.ones((n,), jnp.float32)
+        ones_m = jnp.ones((m,), jnp.float32)
+        weighted = wx is not None or wy is not None
+        return _gram_dense(
+            x, y,
+            jnp.asarray(wx, jnp.float32) if wx is not None else ones_n,
+            jnp.asarray(wy, jnp.float32) if wy is not None else ones_m,
+            sigma=float(sigma), p=int(p), weighted=weighted,
+            precision=precision)
+    if blocks is None:
+        blocks = _fat_gram_blocks(x.shape[1]) if plan == "pallas_fat" \
+            else pick_gram_blocks(x.shape[1])
+    bn, bm, bk = blocks
     # shrink tiles toward small inputs so a 150-row Gram doesn't pad to 512
     bn = min(bn, _round_up(n, 128))
     bm = min(bm, _round_up(m, 128))
@@ -83,8 +284,9 @@ def gram(x, y, *, sigma: float, p: int = 2, wx=None, wy=None,
     if dpad:
         x = jnp.pad(x, ((0, 0), (0, dpad)))
         y = jnp.pad(y, ((0, 0), (0, dpad)))
-    xp = _pad_rows(x, bn)
-    yp = _pad_rows(y, bm)
+    cd = _compute_dtype(precision)
+    xp = _pad_rows(x, bn).astype(cd)
+    yp = _pad_rows(y, bm).astype(cd)
     wxp = _pad_rows(jnp.asarray(wx, jnp.float32), bn) if wx is not None \
         else jnp.ones((xp.shape[0],), jnp.float32)
     wyp = _pad_rows(jnp.asarray(wy, jnp.float32), bm) if wy is not None \
@@ -95,10 +297,16 @@ def gram(x, y, *, sigma: float, p: int = 2, wx=None, wy=None,
 
 
 def weighted_gram(centers, weights, *, sigma: float, p: int = 2,
-                  interpret: bool | None = None) -> Array:
+                  interpret: bool | None = None, precision: str = "f32",
+                  plan: str | None = None) -> Array:
     """Algorithm 1's K-tilde = W K^C W in one fused pass."""
     return gram(centers, centers, sigma=sigma, p=p, wx=weights, wy=weights,
-                interpret=interpret)
+                interpret=interpret, precision=precision, plan=plan)
+
+
+# --------------------------------------------------------------------------
+# shadow_assign
+# --------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
@@ -108,18 +316,29 @@ def _assign_call(xp, cp, vp, *, bn, bm, interpret):
 
 
 def shadow_assign(x, centers, m_valid: int | None = None, *, valid=None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, plan: str | None = None):
     """Nearest-center (idx, d2min) via the Pallas assignment kernel.
 
     Validity can be given as a static prefix length ``m_valid`` or as a
     dynamic per-center ``valid`` mask (used by blocked shadow selection: the
     round loop reuses one compiled kernel with a fresh mask each round).
+    Assignment always resolves distances in f32 — a bf16 argmin could flip
+    nearest centers, so ``precision`` deliberately does not thread here.
     """
     if interpret is None:
         interpret = not _on_tpu()
     x = jnp.asarray(x, jnp.float32)
     centers = jnp.asarray(centers, jnp.float32)
     n, m = x.shape[0], centers.shape[0]
+    if plan is None:
+        plan = _assign_plan(n, m, x.shape[1], interpret)
+    if valid is None:
+        m_valid = m if m_valid is None else int(m_valid)
+        valid = (jnp.arange(m) < m_valid).astype(jnp.float32)
+    else:
+        valid = jnp.asarray(valid, jnp.float32)
+    if plan == "dense":
+        return _assign_dense(x, centers, valid)
     # off-TPU the grid loop itself is the overhead (no VMEM limit to respect),
     # so take far fewer, fatter row tiles: 8192 rows ~2.3x faster than 512 at
     # n=32k in interpret mode
@@ -132,13 +351,15 @@ def shadow_assign(x, centers, m_valid: int | None = None, *, valid=None,
     bn = min(block_n, _round_up(-(-npad // tiles), 128))
     xp = _pad_rows(x, bn)
     cp = _pad_rows(centers, block_m)
-    if valid is None:
-        m_valid = m if m_valid is None else int(m_valid)
-        valid = (jnp.arange(m) < m_valid).astype(jnp.float32)
-    vp = _pad_rows(jnp.asarray(valid, jnp.float32), block_m)
+    vp = _pad_rows(valid, block_m)
     idx, d2 = _assign_call(xp, cp, vp, bn=bn, bm=block_m,
                            interpret=bool(interpret))
     return idx[:n], d2[:n]
+
+
+# --------------------------------------------------------------------------
+# kpca_project
+# --------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "p", "bn", "interpret"))
@@ -147,9 +368,16 @@ def _project_call(xp, cp, ap, *, sigma, p, bn, interpret):
                                         block_n=bn, interpret=interpret)
 
 
+def projection_compile_count() -> int:
+    """Total jit traces of the projection entry points (test hook for the
+    recompile-free serving contract)."""
+    return int(_project_call._cache_size() + _project_dense._cache_size())
+
+
 def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
                  chunk: int | None = None,
-                 interpret: bool | None = None) -> Array:
+                 interpret: bool | None = None, precision: str = "f32",
+                 plan: str | None = None) -> Array:
     """Fused z = k(x, C) @ A.  Pads m with zero projector rows (harmless:
     padded centers contribute k(x, 0-pad)*0).
 
@@ -157,6 +385,9 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     arbitrarily large query sets never materialize more than a
     (chunk, m_pad) working set on device (the fused kernel never writes the
     q x m Gram to HBM either way — this bounds the padded INPUT residency).
+    The tail slice is padded UP to the same fixed chunk and stripped after,
+    so a ragged query stream compiles exactly once — the recompile-free
+    serving contract (asserted in tests/test_kernels.py).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -164,16 +395,25 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     centers = jnp.asarray(centers, jnp.float32)
     projector = jnp.asarray(projector, jnp.float32)
     n, r = x.shape[0], projector.shape[1]
+    m, d = centers.shape
+    if plan is None:
+        plan = _project_plan(min(n, chunk or n), m, d, r, precision,
+                             interpret)
+    cd = _compute_dtype(precision)
     # pad m to a lane multiple; padded projector rows are zero so padded
     # centers cannot contribute
-    cp = _pad_rows(centers, 128)
+    cp = _pad_rows(centers, 128).astype(cd)
     ap = _pad_rows(projector, 128)
     rp = _round_up(r, 128)
     ap = jnp.pad(ap, ((0, 0), (0, rp - r)))
 
     def run(xs):
+        if plan == "dense":
+            return _project_dense(xs, centers, projector,
+                                  sigma=float(sigma), p=int(p),
+                                  precision=precision)
         bn = min(512, _round_up(xs.shape[0], 128))
-        xsp = _pad_rows(xs, bn)
+        xsp = _pad_rows(xs, bn).astype(cd)
         out = _project_call(xsp, cp, ap, sigma=float(sigma), p=int(p),
                             bn=bn, interpret=bool(interpret))
         return out[: xs.shape[0], :r]
@@ -181,5 +421,9 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     if chunk is None or n <= chunk:
         return run(x)
     chunk = _round_up(chunk, 128)
-    pieces = [run(x[s : s + chunk]) for s in range(0, n, chunk)]
-    return jnp.concatenate(pieces, axis=0)
+    # fixed-shape streaming: pad the row count to a chunk multiple so EVERY
+    # slice (the ragged tail included) traces with one shape
+    xpad = _pad_rows(x, chunk)
+    pieces = [run(xpad[s : s + chunk])
+              for s in range(0, xpad.shape[0], chunk)]
+    return jnp.concatenate(pieces, axis=0)[:n]

@@ -30,3 +30,13 @@ def smoke_mesh(n: int | None = None, with_model: bool = False):
     if with_model and n >= 4:
         return make_mesh((n // 2, 2), ("data", "model"))
     return make_mesh((n,), ("data",))
+
+
+def data_mesh(ndev: int | None = None):
+    """1-D ('data',) mesh over all (or the first ``ndev``) devices — the axis
+    the sharded RSKPCA fit/transform path shards rows over (DESIGN.md §5).
+    Works identically on a single device, so ``fit(..., mesh=data_mesh())``
+    is always safe."""
+    devices = jax.devices()
+    ndev = ndev or len(devices)
+    return make_mesh((ndev,), ("data",))

@@ -1,0 +1,124 @@
+"""The measured compute-plan autotuner (repro.kernels.autotune)."""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops, ref
+
+
+@pytest.fixture
+def fresh_cache(tmp_path, monkeypatch):
+    """Isolate both cache layers: empty disk file in tmp, empty memory."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune.clear(in_memory_only=False)
+    yield path
+    autotune.clear(in_memory_only=False)
+
+
+def test_bucket_pow2_ceiling():
+    assert autotune.bucket(1) == 128          # lo clip
+    assert autotune.bucket(128) == 128
+    assert autotune.bucket(129) == 256
+    assert autotune.bucket(1000) == 1024
+    assert autotune.bucket(10**9) == 1 << 17  # hi clip
+    assert autotune.bucket(24, lo=8) == 32
+
+
+def test_best_measures_once_and_caches(fresh_cache):
+    calls = {"a": 0, "b": 0}
+
+    def mk(name, cost):
+        def thunk():
+            calls[name] += 1
+            import time
+            time.sleep(cost)
+        return thunk
+
+    cands = {"a": mk("a", 0.0), "b": mk("b", 0.01)}
+    assert autotune.best("k1", cands, default="b") == "a"
+    first_calls = dict(calls)
+    assert first_calls["a"] >= 2 and first_calls["b"] >= 2  # warmup + reps
+    # second request: served from memory, thunks untouched
+    assert autotune.best("k1", cands, default="b") == "a"
+    assert calls == first_calls
+
+
+def test_best_persists_to_disk_and_reloads(fresh_cache):
+    autotune.best("k2", {"fast": lambda: None,
+                         "slow": lambda: __import__("time").sleep(0.01)},
+                  default="slow")
+    disk = json.load(open(fresh_cache))
+    assert disk["k2"]["winner"] == "fast"
+    # a fresh process (cleared memory) must reload the winner WITHOUT
+    # measuring: candidates that raise would disqualify themselves
+    autotune.clear(in_memory_only=False)
+
+    def boom():
+        raise AssertionError("re-measured despite disk cache")
+
+    assert autotune.best("k2", {"fast": boom, "slow": boom},
+                         default="slow") == "fast"
+
+
+def test_single_candidate_skips_measurement(fresh_cache):
+    calls = []
+    assert autotune.best("k3", {"only": lambda: calls.append(1)},
+                         default="only") == "only"
+    assert not calls
+
+
+def test_failing_candidate_disqualified(fresh_cache):
+    def boom():
+        raise RuntimeError("no backend")
+
+    assert autotune.best("k4", {"bad": boom, "ok": lambda: None},
+                         default="bad") == "ok"
+
+
+def test_measurement_disabled_uses_heuristic(fresh_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert not autotune.measurement_enabled()
+    # small problem, interpret mode -> dense; huge -> pallas
+    assert autotune.heuristic_plan(100, 100, interpret=True) == "dense"
+    assert autotune.heuristic_plan(10**5, 10**5, interpret=True) == "pallas"
+    # ops must not record anything while disabled
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(100, 8)).astype(np.float32)
+    ops.gram(x, x, sigma=1.0)
+    assert not os.path.exists(fresh_cache)
+
+
+def test_autotuned_gram_matches_ref(fresh_cache):
+    """Whatever plan wins the measurement, the result is the same Gram."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(200, 16)).astype(np.float32)
+    y = rng.normal(size=(90, 16)).astype(np.float32)
+    got = np.asarray(ops.gram(x, y, sigma=1.7))
+    want = np.asarray(ref.gram_ref(jnp.asarray(x), jnp.asarray(y), 1.7, 2))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    # and the measurement was recorded under a gram| key
+    disk = json.load(open(fresh_cache))
+    assert any(k.startswith("gram|") for k in disk)
+
+
+def test_dense_candidate_capped_for_huge_problems(monkeypatch):
+    """Beyond DENSE_MAX_CELLS the dense path must not even be a measurement
+    candidate (its intermediates would not fit); the plan must come back
+    pallas-tiled."""
+    seen = {}
+
+    def fake_best(key, candidates, default):
+        seen[key] = set(candidates)
+        return "pallas"
+
+    monkeypatch.setattr(autotune, "best", fake_best)
+    kind, blocks = ops._gram_plan(1 << 16, 1 << 14, 64, "f32",
+                                  interpret=True)
+    assert kind == "pallas" and blocks is not None
+    (names,) = seen.values()
+    assert "dense" not in names and "pallas" in names

@@ -20,7 +20,8 @@ def test_gram_sweep(n, m, d, p, dtype):
     y = rng.normal(size=(m, d)).astype(dtype)
     wx = rng.uniform(0.5, 3, n).astype(np.float32)
     wy = rng.uniform(0.5, 3, m).astype(np.float32)
-    got = np.asarray(ops.gram(x, y, sigma=2.5, p=p, wx=wx, wy=wy))
+    got = np.asarray(ops.gram(x, y, sigma=2.5, p=p, wx=wx, wy=wy,
+                              plan="pallas"))
     want = np.asarray(ref.gram_ref(jnp.asarray(x), jnp.asarray(y), 2.5, p,
                                    jnp.asarray(wx), jnp.asarray(wy)))
     tol = 2e-5 if dtype == np.float32 else 2e-2
@@ -32,7 +33,7 @@ def test_gram_unweighted(n, m, d):
     rng = np.random.default_rng(0)
     x = rng.normal(size=(n, d)).astype(np.float32)
     y = rng.normal(size=(m, d)).astype(np.float32)
-    got = np.asarray(ops.gram(x, y, sigma=1.5))
+    got = np.asarray(ops.gram(x, y, sigma=1.5, plan="pallas"))
     want = np.asarray(ref.gram_ref(jnp.asarray(x), jnp.asarray(y), 1.5, 2))
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
 
@@ -43,7 +44,7 @@ def test_weighted_gram_is_algorithm1_ktilde():
     rng = np.random.default_rng(3)
     c = rng.normal(size=(57, 12)).astype(np.float32)
     w = rng.uniform(1, 9, 57).astype(np.float32)
-    got = np.asarray(ops.weighted_gram(c, w, sigma=2.0))
+    got = np.asarray(ops.weighted_gram(c, w, sigma=2.0, plan="pallas"))
     want = np.asarray(core_wg(gaussian(2.0), jnp.asarray(c), jnp.asarray(w)))
     np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
 
@@ -53,7 +54,7 @@ def test_shadow_assign_sweep(n, m, d):
     rng = np.random.default_rng(hash((n, m)) % 2**32)
     x = rng.normal(size=(n, d)).astype(np.float32)
     c = rng.normal(size=(m, d)).astype(np.float32)
-    idx, d2 = ops.shadow_assign(x, c, m)
+    idx, d2 = ops.shadow_assign(x, c, m, plan="pallas")
     idx_r, d2_r = ref.shadow_assign_ref(jnp.asarray(x), jnp.asarray(c), m)
     assert (np.asarray(idx) == np.asarray(idx_r)).all()
     np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_r),
@@ -66,7 +67,7 @@ def test_shadow_assign_padding_mask():
     x = rng.normal(size=(100, 8)).astype(np.float32)
     c = np.concatenate([rng.normal(size=(5, 8)),
                         np.zeros((10, 8))]).astype(np.float32)
-    idx, _ = ops.shadow_assign(x, c, m_valid=5)
+    idx, _ = ops.shadow_assign(x, c, m_valid=5, plan="pallas")
     assert (np.asarray(idx) < 5).all()
 
 
@@ -77,7 +78,7 @@ def test_kpca_project_sweep(n, m, d, r):
     x = rng.normal(size=(n, d)).astype(np.float32)
     c = rng.normal(size=(m, d)).astype(np.float32)
     a = rng.normal(size=(m, r)).astype(np.float32)
-    got = np.asarray(ops.kpca_project(x, c, a, sigma=2.0))
+    got = np.asarray(ops.kpca_project(x, c, a, sigma=2.0, plan="pallas"))
     want = np.asarray(ref.kpca_project_ref(jnp.asarray(x), jnp.asarray(c),
                                            jnp.asarray(a), 2.0, 2))
     np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
@@ -112,7 +113,9 @@ def test_backend_dispatch_parity(n, m, d, p, weighted):
 
 def test_default_backend_never_calls_dense_gram(monkeypatch):
     """Acceptance guard: on the default backend neither fit_rskpca, fit_kpca,
-    herding, nor transform may touch the dense gram path."""
+    herding, nor transform may touch kernels_math's dense oracle — everything
+    must route through the repro.kernels.ops dispatch layer (whose autotuned
+    dense FALLBACK is its own policy and deliberately not patched here)."""
     from repro.core import kernels_math, rskpca, rsde
 
     def boom(*a, **kw):
@@ -151,12 +154,36 @@ def test_shadow_assign_dynamic_valid_mask():
     x = rng.normal(size=(200, 8)).astype(np.float32)
     c = rng.normal(size=(17, 8)).astype(np.float32)
     mask = (rng.random(17) > 0.4).astype(np.float32)
-    idx, d2 = ops.shadow_assign(x, c, valid=mask)
+    idx, d2 = ops.shadow_assign(x, c, valid=mask, plan="pallas")
     dense = np.linalg.norm(x[:, None] - c[None], axis=2) ** 2
     dense[:, mask == 0] = np.inf
     assert (np.asarray(idx) == dense.argmin(1)).all()
     np.testing.assert_allclose(np.asarray(d2), dense.min(1), atol=1e-4,
                                rtol=1e-4)
+
+
+def test_ragged_transform_compiles_once(monkeypatch):
+    """Recompile-free serving: a stream of ragged query sizes through the
+    fixed-chunk transform path must compile the projection exactly ONCE —
+    the tail slice is padded UP to the chunk size, never traced at its own
+    shape.  Autotune measurement is disabled so the compile count is
+    deterministic."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    from repro.core import gaussian, fit
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(400, 12)).astype(np.float32)
+    mdl = fit(x, gaussian(1.5), 5, method="shadow", ell=3.0)
+    queries = [rng.normal(size=(qn, 12)).astype(np.float32)
+               for qn in (500, 700, 901, 1000)]
+    before = ops.projection_compile_count()
+    outs = [mdl.transform(q, chunk=384) for q in queries]
+    after = ops.projection_compile_count()
+    assert after - before == 1, (before, after)
+    for q, z in zip(queries, outs):
+        assert z.shape == (q.shape[0], 5)
+    # the padded tail must not perturb the embedding
+    np.testing.assert_allclose(outs[0], mdl.transform(queries[0], chunk=None),
+                               atol=1e-5, rtol=1e-5)
 
 
 def test_block_size_selection_respects_vmem_budget():

@@ -1,0 +1,111 @@
+"""Mixed-precision (bf16 MXU operands, f32 accumulation) parity tests.
+
+Tolerances (documented contract, DESIGN.md §3): bf16 has an 8-bit mantissa,
+so rounding the operands costs ~4e-3 relative in the squared distances.
+Gram entries live in [0, 1] (exp of a negative), so we check
+atol=rtol=2e-2 for Gram-shaped outputs and 5e-2 for projections (which sum
+m kernel values through a second bf16 matmul).  Accumulation and the exp
+nonlinearity stay f32, so the error does NOT grow with d or m beyond these
+bounds — that is exactly what the sweeps below pin down.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+GRAM_TOL = 2e-2
+PROJ_TOL = 5e-2
+
+SHAPES = [(100, 37, 24), (256, 256, 256), (513, 129, 16)]
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+@pytest.mark.parametrize("plan", ["pallas", "dense"])
+def test_gram_bf16_parity(n, m, d, plan):
+    rng = np.random.default_rng(hash((n, m, d)) % 2**32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(m, d)).astype(np.float32)
+    got = np.asarray(ops.gram(x, y, sigma=2.0, precision="bf16", plan=plan))
+    want = np.asarray(ref.gram_ref(jnp.asarray(x), jnp.asarray(y), 2.0, 2))
+    np.testing.assert_allclose(got, want, atol=GRAM_TOL, rtol=GRAM_TOL)
+
+
+@pytest.mark.parametrize("plan", ["pallas", "dense"])
+def test_weighted_gram_bf16_parity(plan):
+    rng = np.random.default_rng(3)
+    c = rng.normal(size=(157, 12)).astype(np.float32)
+    w = rng.uniform(1, 9, 157).astype(np.float32)
+    got = np.asarray(ops.weighted_gram(c, w, sigma=2.0, precision="bf16",
+                                       plan=plan))
+    want = np.asarray(ref.gram_ref(jnp.asarray(c), jnp.asarray(c), 2.0, 2,
+                                   jnp.asarray(w), jnp.asarray(w)))
+    # weighting scales entries by sqrt(w_i w_j) <= 9: scale the tolerance too
+    np.testing.assert_allclose(got, want, atol=9 * GRAM_TOL, rtol=GRAM_TOL)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+@pytest.mark.parametrize("plan", ["pallas", "dense"])
+def test_kpca_project_bf16_parity(n, m, d, plan):
+    rng = np.random.default_rng(hash((n, m, d, 7)) % 2**32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(m, d)).astype(np.float32)
+    a = (rng.normal(size=(m, 8)) / np.sqrt(m)).astype(np.float32)
+    got = np.asarray(ops.kpca_project(x, c, a, sigma=2.0, precision="bf16",
+                                      plan=plan))
+    want = np.asarray(ref.kpca_project_ref(jnp.asarray(x), jnp.asarray(c),
+                                           jnp.asarray(a), 2.0, 2))
+    scale = np.abs(want).max()
+    np.testing.assert_allclose(got, want, atol=PROJ_TOL * scale,
+                               rtol=PROJ_TOL)
+
+
+def test_kernel_precision_field_and_validation():
+    from repro.core.kernels_math import gaussian, make_kernel
+    k = gaussian(1.5)
+    assert k.precision == "f32"
+    kb = k.with_precision("bf16")
+    assert kb.precision == "bf16" and kb.sigma == k.sigma
+    assert make_kernel("laplacian", 2.0, precision="bf16").precision == "bf16"
+    with pytest.raises(ValueError):
+        gaussian(1.0, precision="f16")
+    # the dense backend is the f32 parity oracle: bf16 on it must be loud,
+    # not silently computed in f32
+    with pytest.raises(ValueError):
+        gaussian(1.0, backend="dense", precision="bf16")
+    with pytest.raises(ValueError):
+        kb.with_backend("dense")
+
+
+def test_fit_rskpca_bf16_spectral_error_within_bound_slack():
+    """bf16 must not move the RSKPCA spectrum by more than the §5 slack:
+    the f32-vs-bf16 eigenvalue gap (sum of squares, the Thm 5.2 metric of
+    tests/test_bounds.py) stays far inside the eigenvalue_bound(ell) budget
+    the quantization itself is allowed to spend."""
+    from repro.core import gaussian, shadow_rsde, fit_rskpca
+    from repro.data import make_dataset
+    x, _, sigma = make_dataset("german", seed=0, n=400)
+    ell = 4.0
+    ker = gaussian(sigma)
+    rsde = shadow_rsde(x, ker, ell)
+    m32 = fit_rskpca(rsde, ker, rank=5)
+    m16 = fit_rskpca(rsde, ker.with_precision("bf16"), rank=5)
+    gap_sq = float(np.sum((m32.eigvals - m16.eigvals) ** 2))
+    assert gap_sq <= ker.eigenvalue_bound(ell), (
+        gap_sq, ker.eigenvalue_bound(ell))
+    # and it is a small fraction of that budget, not merely inside it
+    assert gap_sq <= 0.1 * ker.eigenvalue_bound(ell)
+
+
+def test_transform_bf16_close_to_f32():
+    from repro.core import gaussian, fit
+    from repro.data import make_dataset
+    x, _, sigma = make_dataset("german", seed=0, n=400)
+    ker = gaussian(sigma)
+    m32 = fit(x, ker, 5, method="shadow", ell=4.0)
+    m16 = fit(x, ker, 5, method="shadow", ell=4.0, precision="bf16")
+    assert m16.kernel.precision == "bf16"
+    z32, z16 = m32.transform(x[:100]), m16.transform(x[:100])
+    scale = np.abs(z32).max()
+    np.testing.assert_allclose(z16, z32, atol=PROJ_TOL * scale,
+                               rtol=PROJ_TOL)

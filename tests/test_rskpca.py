@@ -131,6 +131,18 @@ def test_top_eigh_lobpcg_branch_matches_eigh():
     np.testing.assert_allclose(np.asarray(lam), lam_true[:6], rtol=5e-4)
 
 
+def test_rank_exceeding_m_truncates_gracefully(data):
+    """rank > m must truncate to m components on every eigensolver path
+    (the CPU subset-eigh fast path regressed this once)."""
+    x, _, sigma = data
+    ker = gaussian(sigma)
+    rsde = shadow_rsde(x[:60], ker, ell=1.5)  # coarse cover -> tiny m
+    assert rsde.m < 10
+    mdl = fit_rskpca(rsde, ker, rank=rsde.m + 4)
+    assert mdl.rank == rsde.m
+    assert np.isfinite(mdl.transform(x[:5])).all()
+
+
 def test_laplacian_kernel_works(data):
     x, _, sigma = data
     ker = laplacian(sigma)
