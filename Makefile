@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: test bench bench-smoke bench-shard
+.PHONY: test bench bench-smoke bench-shard bench-stream
 
 # the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
@@ -21,3 +21,9 @@ bench-smoke:
 # (multi-host-device mesh, bf16 MXU operands) to BENCH_rskpca.json
 bench-shard:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke --mesh --precision bf16
+
+# streaming operator maintenance: per-update incremental patch vs full refit
+# at m in {256, 1024, 4096}; appends mode=stream rows to BENCH_rskpca.json
+# and fails if any update_speedup < 1.0
+bench-stream:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --stream

@@ -245,6 +245,89 @@ def bench_sharded(precision: str = "bf16"):
     print(f"# appended sharded rows to {BENCH_JSON}", flush=True)
     return rows
 
+def bench_stream(fast: bool = True, ms=(256, 1024, 4096), rank: int = 8):
+    """Streaming scenario: per-update cost of the incremental operator
+    patch (rank-one Gram row + Rayleigh-Ritz eigen-update, DESIGN.md §6)
+    vs a FULL refit on the equivalent center set, at m live centers.
+
+    Appends ``mode="stream"`` rows to BENCH_rskpca.json; run.py --stream
+    gates on ``update_speedup >= 1.0`` for every freshly-measured row.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gaussian, fit_rskpca
+    from repro.core.rsde import RSDE
+    from repro import streaming
+    from repro.streaming import updates as supdates
+
+    rng = np.random.default_rng(0)
+    d = 16
+    batch = 16
+    rows = []
+    for m in ms:
+        c = (rng.normal(size=(m, d)) * 3.0).astype(np.float32)
+        w = rng.integers(1, 8, m).astype(np.float64)
+        rsde = RSDE(c, w, n=float(w.sum()), scheme="bench")
+        ker = gaussian(1.0)
+        # budget=inf measures the steady-state PATCH path (the refit column
+        # is exactly what the budget check falls back to)
+        st = streaming.from_rsde(rsde, ker, rank, eps=0.5, cap=2 * m,
+                                 budget=float("inf"))
+        # half of every batch lands inside existing shadows (absorb), half
+        # in FRESH far-out territory (insert): both rank-one update flavors
+        # in every measured step — each rep gets its own far points, or the
+        # warmup's inserts would turn later reps absorb-only
+        reps = 2 if fast else 3
+
+        def fresh_batch(k):
+            near = c[rng.integers(0, m, batch // 2)] \
+                + 0.1 * rng.normal(size=(batch // 2, d))
+            far = rng.normal(size=(batch - batch // 2, d)) * 3.0 \
+                + 25.0 * (k + 1)
+            return jnp.asarray(np.concatenate([near, far]).astype(np.float32))
+
+        st = supdates.ingest_batch(st, fresh_batch(0))  # compile warmup
+        jax.block_until_ready(st.eigvals)
+        best_up = float("inf")
+        for rep in range(reps):
+            xb = fresh_batch(rep + 1)
+            jax.block_until_ready(xb)
+            t0 = time.perf_counter()
+            st = supdates.ingest_batch(st, xb)
+            jax.block_until_ready(st.eigvals)
+            best_up = min(best_up, time.perf_counter() - t0)
+        update_s = best_up / batch
+
+        rs = st.as_rsde()
+        fit_rskpca(rs, ker, rank)  # compile warmup
+        best_refit = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fit_rskpca(rs, ker, rank)
+            best_refit = min(best_refit, time.perf_counter() - t0)
+
+        row = dict(
+            m=m, mode="stream", cap=st.cap, batch=batch,
+            update_s=round(update_s, 6), refit_s=round(best_refit, 4),
+            update_speedup=round(best_refit / update_s, 1),
+        )
+        rows.append(row)
+        emit(f"rskpca_stream_m{m}", update_s * 1e6,
+             **{k: v for k, v in row.items() if k != "m"})
+
+    try:
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = {"bench": "rskpca_fit_transform", "rows": []}
+    doc["rows"] = [r for r in doc["rows"] if r.get("mode") != "stream"] + rows
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# appended stream rows to {BENCH_JSON}", flush=True)
+    return rows
+
+
 _CHILD = """
 import os, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -18,11 +18,29 @@ def _assert_no_fit_regression() -> None:
     from benchmarks.rskpca_scale import BENCH_JSON
     with open(BENCH_JSON) as f:
         rows = json.load(f)["rows"]
-    fresh = [r for r in rows if not r.get("stale")]
+    fresh = [r for r in rows if not r.get("stale") and "fit_speedup" in r]
     bad = [r for r in fresh if r["fit_speedup"] < 1.0]
     assert not bad, f"fit_speedup regression below 1.0x: {bad}"
     print(f"# fit_speedup >= 1.0 across all {len(fresh)} freshly-measured "
           f"rows", flush=True)
+
+
+def _assert_stream_speedup() -> None:
+    """Perf gate for the streaming subsystem: every freshly-measured
+    mode="stream" row must show the incremental operator patch beating a
+    full refit (update_speedup >= 1.0; at m=4096 the expectation is >=5x —
+    see DESIGN.md §6)."""
+    import json
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows
+             if r.get("mode") == "stream" and not r.get("stale")]
+    assert fresh, "no fresh stream rows were measured"
+    bad = [r for r in fresh if r["update_speedup"] < 1.0]
+    assert not bad, f"incremental update slower than a full refit: {bad}"
+    print(f"# update_speedup >= 1.0 across all {len(fresh)} stream rows",
+          flush=True)
 
 
 def main() -> None:
@@ -40,11 +58,24 @@ def main() -> None:
                          "rows to BENCH_rskpca.json")
     ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
                     help="precision for the --mesh sharded rows")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming bench: per-update incremental patch vs "
+                         "full refit at m in {256,1024,4096}; appends "
+                         "mode=stream rows to BENCH_rskpca.json and fails "
+                         "on any update_speedup < 1.0")
     args = ap.parse_args()
     fast = not args.full
     if args.mesh and not args.smoke:
         ap.error("--mesh requires --smoke (the sharded bench extends the "
                  "smoke's BENCH_rskpca.json)")
+
+    if args.stream:
+        from benchmarks import rskpca_scale
+        print("# --- rskpca streaming update vs refit ---", flush=True)
+        rskpca_scale.bench_stream(fast=fast)
+        _assert_stream_speedup()
+        if not args.smoke:
+            return
 
     if args.smoke:
         from benchmarks import rskpca_scale

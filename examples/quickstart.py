@@ -1,31 +1,54 @@
-"""Quickstart: Reduced-Set KPCA in ~30 lines (paper Algorithms 1+2).
+"""Quickstart: Reduced-Set KPCA on the real hot path (~40 lines).
 
     PYTHONPATH=src python examples/quickstart.py
+
+This exercises the current API surface (DESIGN.md §3, §5): the one-call
+``fit`` front door (blocked Algorithm 2 selection + fused Pallas weighted
+Gram + top-r eigensolve under one jit), the ``Kernel.backend`` compute
+switch, bf16 mixed precision, and the sharded fit/serve path over a device
+mesh.
 """
 import numpy as np
 
-from repro.core import gaussian, shadow_rsde, fit_rskpca, fit_kpca, mmd
+from repro.core import fit, gaussian, mmd
 from repro.data import make_dataset
+from repro.launch.mesh import data_mesh
 
 # 1. data + bandwidth (median heuristic)
 x, y, sigma = make_dataset("pendigits", n=1500)
-kernel = gaussian(sigma)
+kernel = gaussian(sigma)  # backend="pallas", precision="f32" by default
 
-# 2. shadow density estimate: single-pass eps-cover with eps = sigma/ell
-rsde = shadow_rsde(x, kernel, ell=4.0)
-print(f"ShDE: {rsde.m}/{rsde.n} centers retained "
-      f"({100 * rsde.retention:.1f}% of the data)")
+# 2. one-call fit: ShDE centers from eps = sigma/ell, then Algorithm 1 on
+#    the m x m weighted Gram (never n x n)
+model = fit(x, kernel, rank=5, method="shadow", ell=4.0)
+print(f"ShDE kept {model.m}/{len(x)} centers "
+      f"({100.0 * model.m / len(x):.1f}% of the data)")
+print(f"top-5 eigenvalues: {np.round(model.eigvals, 4)}")
 
-# 3. reduced-set KPCA: eigendecompose the m x m weighted Gram (not n x n!)
-model = fit_rskpca(rsde, kernel, rank=5)
-embedding = model.transform(x[:10])
-print("embedding of 10 points:\n", np.round(embedding, 3))
+# 3. serving: fused kernel-eval + projection, streamed in fixed chunks so a
+#    ragged query stream compiles exactly once
+z = model.transform(x[:10])
+print("embedding of 10 points:\n", np.round(z, 3))
 
-# 4. how good is the approximation? (Theorem 5.1 bound check)
-val = mmd.mmd_weighted(kernel, x, rsde.centers, rsde.weights)
-print(f"MMD(KDE, ShDE) = {val:.4f}  <=  bound {kernel.mmd_bound(4.0):.4f}")
+# 4. the parity/precision switches on the SAME pipeline:
+#    backend="dense" is the pure-jnp f32 oracle, precision="bf16" feeds
+#    bf16 MXU operands with f32 accumulation
+oracle = fit(x, kernel, rank=5, method="shadow", ell=4.0, backend="dense")
+half = fit(x, kernel, rank=5, method="shadow", ell=4.0, precision="bf16")
+print(f"|pallas - dense| eigval gap: "
+      f"{np.abs(model.eigvals - oracle.eigvals).max():.2e}")
+print(f"|bf16 - f32|    eigval gap: "
+      f"{np.abs(model.eigvals - half.eigvals).max():.2e}")
 
-# 5. versus exact KPCA
-exact = fit_kpca(x, kernel, rank=5)
-print(f"top-5 eigenvalues  rskpca: {np.round(model.eigvals, 4)}")
-print(f"                   kpca  : {np.round(exact.eigvals, 4)}")
+# 5. the sharded pipeline: two-level distributed selection, row-sharded Gram
+#    assembly, sharded serving (1 device here; a pod scales the axis)
+mesh = data_mesh()
+sharded = fit(x, kernel, rank=5, method="shadow", ell=4.0, mesh=mesh)
+print("sharded (two-level) fit kept", sharded.m, "centers")
+# sharded SERVING of the same operator matches single-device serving
+z_mesh = model.transform(x[:10], mesh=mesh)
+print("sharded serve parity:", bool(np.allclose(z, z_mesh, atol=1e-4)))
+
+# 6. how good is the reduced operator? Theorem 5.1 bounds the MMD between
+#    the KDE and ANY shadow quantization at this ell
+print(f"worst-case MMD bound at ell=4: {kernel.mmd_bound(4.0):.4f}")

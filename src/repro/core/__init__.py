@@ -19,6 +19,9 @@ from repro.core.rskpca import (  # noqa: F401
 )
 from repro.core.nystrom import fit_nystrom, fit_weighted_nystrom  # noqa: F401
 from repro.core import mmd  # noqa: F401
+from repro.core.mmd import (  # noqa: F401
+    weight_update_bound, absorb_bound, insert_bound, remove_bound,
+)
 from repro.core.kmla import (  # noqa: F401
     reduced_laplacian_eigenmaps, reduced_diffusion_maps,
 )

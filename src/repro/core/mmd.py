@@ -111,6 +111,50 @@ def eigenspace_projection_distance(kernel: Kernel, x, x_quant, rank: int) -> flo
     return float(np.linalg.norm(proj[0] - proj[1]))
 
 
+def weight_update_bound(n_old, n_new, w_old, w_new, kappa: float = 1.0):
+    """Closed-form Frobenius bound on the normalized-operator perturbation
+    caused by changing ONE center's weight (the §5 machinery applied to a
+    single online update; jittable, returns a f32 scalar).
+
+    The reduced operator is K-tilde/n = (s s^T ⊙ K) / n with s = sqrt(w),
+    ||s||^2 = n and |K_ij| <= kappa.  Changing center j's weight w -> w'
+    (and the total mass n -> n') changes the weight factor by the RANK-TWO
+    matrix a a^T - b b^T with unit vectors a = s'/sqrt(n'), b = s/sqrt(n),
+    so with t = a.b = (n - w + sqrt(w w')) / sqrt(n n'):
+
+        || K-tilde'/n' - K-tilde/n ||_F  <=  kappa * sqrt(2 (1 - t^2))
+
+    Special cases (the paper's Theorem 5.1/5.3 flavor, per update):
+      * insert a fresh unit-mass center: w=0, w'=1  ->  kappa sqrt(2/(n+1))
+      * absorb one sample into center j:  w'=w+1, n'=n+1
+      * remove center j entirely:         w'=0, n'=n-w  ->  kappa sqrt(2w/n)
+    """
+    n_old = jnp.asarray(n_old, jnp.float32)
+    n_new = jnp.asarray(n_new, jnp.float32)
+    w_old = jnp.asarray(w_old, jnp.float32)
+    w_new = jnp.asarray(w_new, jnp.float32)
+    t = (n_old - w_old + jnp.sqrt(w_old * w_new)) / jnp.sqrt(
+        jnp.maximum(n_old * n_new, 1e-12))
+    return kappa * jnp.sqrt(jnp.maximum(2.0 * (1.0 - t * t), 0.0))
+
+
+def absorb_bound(n, w_j, kappa: float = 1.0):
+    """Perturbation bound for absorbing one sample into a center of weight
+    w_j (Algorithm 2's absorption rule applied online)."""
+    return weight_update_bound(n, n + 1.0, w_j, w_j + 1.0, kappa)
+
+
+def insert_bound(n, kappa: float = 1.0):
+    """Perturbation bound for inserting a fresh unit-mass center."""
+    return weight_update_bound(n, n + 1.0, 0.0, 1.0, kappa)
+
+
+def remove_bound(n, w_j, kappa: float = 1.0):
+    """Perturbation bound for deleting a center of weight w_j — the paper's
+    'remove samples with minimal effect on the empirical operator' (§5)."""
+    return weight_update_bound(n, n - w_j, w_j, 0.0, kappa)
+
+
 def centroid_error_max(kernel: Kernel, x, x_quant) -> float:
     """max_i ||k_{x_i} - k_{c_alpha(i)}||_H = max_i sqrt(2(kappa - k(x_i, c_i')))."""
     x = jnp.asarray(x, jnp.float32)

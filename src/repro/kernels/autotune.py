@@ -19,7 +19,8 @@ cap, a dense-jnp fallback — the crossover that stops small problems from
 paying Pallas interpret/grid overhead.  ``REPRO_AUTOTUNE=0`` disables
 measurement entirely and falls back to a deterministic size heuristic
 (useful for tests that assert compile counts).  ``REPRO_AUTOTUNE_CACHE``
-overrides the on-disk cache location.
+overrides the on-disk cache location; under pytest the disk layer defaults
+OFF (hermetic runs) unless that variable is set explicitly.
 """
 from __future__ import annotations
 
@@ -61,6 +62,18 @@ def _cache_path() -> str:
     return os.path.join(root, ".autotune_cache.json")
 
 
+def _disk_enabled() -> bool:
+    """Disk persistence is OFF under pytest unless a cache path is set
+    explicitly: a test run must neither inherit a developer's measured
+    plans nor pollute the repo with its own (hermetic CI runs point
+    ``REPRO_AUTOTUNE_CACHE`` at a temp file instead).  The in-process
+    cache is unaffected — each test process still measures at most once
+    per key."""
+    if os.environ.get("REPRO_AUTOTUNE_CACHE"):
+        return True
+    return "PYTEST_CURRENT_TEST" not in os.environ
+
+
 def bucket(v: int, lo: int = 128, hi: int = 1 << 17) -> int:
     """Power-of-two ceiling clipped to [lo, hi]: nearby shapes share a key."""
     v = max(int(v), 1)
@@ -73,6 +86,8 @@ def _load_disk() -> None:
     if _DISK_LOADED:
         return
     _DISK_LOADED = True
+    if not _disk_enabled():
+        return
     try:
         with open(_cache_path()) as f:
             disk = json.load(f)
@@ -83,6 +98,8 @@ def _load_disk() -> None:
 
 
 def _save_disk() -> None:
+    if not _disk_enabled():
+        return
     path = _cache_path()
     try:
         # merge with whatever is on disk (a concurrent process may have

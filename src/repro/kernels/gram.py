@@ -74,6 +74,95 @@ def _gram_kernel(x_ref, y_ref, wx_ref, wy_ref, o_ref, *, sigma: float, p: int,
         o_ref[...] = g.astype(o_ref.dtype)
 
 
+def _gram_row_kernel(x_ref, c_ref, w_ref, k_ref, d2_ref, *, sigma: float,
+                     p: int, weighted: bool, k_steps: int):
+    """Grid step (j, k): rank-one Gram-ROW pass for the streaming update path
+    (repro/streaming): one new point against the center tile j, accumulating
+    the partial squared distance over feature chunk k.  On the LAST chunk it
+    emits BOTH the (optionally weight-fused) kernel row — the new row/column
+    of the weighted Gram — and the raw squared distances (the online
+    absorption decision of Algorithm 2 needs them in f32).
+    """
+    k = pl.program_id(1)
+    x = x_ref[...]                      # (8, bk) f32 or bf16 (row 0 is real)
+    c = c_ref[...]                      # (bm, bk)
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    xx = jnp.sum(xf[0] * xf[0])                          # scalar
+    cc = jnp.sum(cf * cf, axis=-1)                       # (bm,)
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0]                                                 # (bm,) on the MXU
+    partial = xx + cc - 2.0 * cross
+
+    @pl.when(k == 0)
+    def _init():
+        d2_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _accum():
+        d2_ref[...] = d2_ref[...] + partial
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        d2 = jnp.maximum(d2_ref[...], 0.0)
+        d2_ref[...] = d2
+        if p == 2:
+            s = d2 / (sigma * sigma)
+        elif p == 1:
+            s = jnp.sqrt(d2) / sigma
+        else:
+            s = d2 ** (p / 2.0) / sigma**p
+        g = jnp.exp(-s)
+        if weighted:
+            g = g * jnp.sqrt(w_ref[...].astype(jnp.float32))
+        k_ref[...] = g.astype(k_ref.dtype)
+
+
+def gram_row_pallas(x: Array, centers: Array, *, sigma: float, p: int = 2,
+                    w: Array | None = None, block_m: int = 512,
+                    block_k: int | None = None,
+                    interpret: bool = False) -> tuple[Array, Array]:
+    """(k_row, d2_row) of one point against all centers in one fused pass.
+
+    x must be padded to (8, d) rows (row 0 real, the rest zero — the 8-row
+    sublane minimum keeps the MXU happy); centers to (m % block_m == 0, d)
+    and d % block_k == 0 (ops.gram_row handles the padding).  ``w`` fuses the
+    sqrt(w_j) column weighting of Algorithm 1's W K W into the same pass.
+    """
+    m, d = centers.shape
+    assert x.shape == (8, d), (x.shape, d)
+    assert m % block_m == 0, (m, block_m)
+    block_k = block_k or d
+    assert d % block_k == 0, (d, block_k)
+    k_steps = d // block_k
+    weighted = w is not None
+    if w is None:
+        w = jnp.ones((m,), jnp.float32)
+
+    kernel = functools.partial(_gram_row_kernel, sigma=float(sigma),
+                               p=int(p), weighted=weighted, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, k_steps),
+        in_specs=[
+            pl.BlockSpec((8, block_k), lambda j, k: (0, k)),
+            pl.BlockSpec((block_m, block_k), lambda j, k: (j, k)),
+            pl.BlockSpec((block_m,), lambda j, k: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m,), lambda j, k: (j,)),
+            pl.BlockSpec((block_m,), lambda j, k: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, centers, w)
+
+
 def gram_pallas(x: Array, y: Array, *, sigma: float, p: int = 2,
                 wx: Array | None = None, wy: Array | None = None,
                 block_n: int = 256, block_m: int = 256,

@@ -305,6 +305,86 @@ def weighted_gram(centers, weights, *, sigma: float, p: int = 2,
 
 
 # --------------------------------------------------------------------------
+# gram_row (streaming rank-one update)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "weighted"))
+def _gram_row_dense(x, c, w, *, sigma, p, weighted):
+    d2 = _dense_sq_dists(x[None, :], c, "f32")[0]
+    g = jnp.exp(-_dist_pow(d2, p) / sigma**p)
+    if weighted:
+        g = g * jnp.sqrt(w)
+    return g, d2
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "interpret", "bm",
+                                             "bk", "weighted"))
+def _gram_row_call(xp, cp, wp, *, sigma, p, interpret, bm, bk, weighted):
+    return _gram.gram_row_pallas(xp, cp, sigma=sigma, p=p,
+                                 w=wp if weighted else None,
+                                 block_m=bm, block_k=bk, interpret=interpret)
+
+
+def _gram_row_plan(m: int, d: int, interpret: bool) -> str:
+    mb = autotune.bucket(m)
+    db = autotune.bucket(d, lo=8, hi=8192)
+    if not autotune.measurement_enabled():
+        # a single row is always a tiny problem off-TPU; on TPU the fused
+        # kernel avoids materializing intermediates
+        return "dense" if interpret else "pallas"
+    mode = "interp" if interpret else "tpu"
+    key = f"gramrow|m{mb}|d{db}|{mode}"
+    x, c = _bench_rows(8, db)[0], _bench_rows(mb, db)
+
+    def run(plan):
+        return lambda: jax.block_until_ready(gram_row(
+            x, c, sigma=1.0, p=2, interpret=interpret, plan=plan)[1])
+
+    return autotune.best(key, {"pallas": run("pallas"), "dense": run("dense")},
+                         default="pallas")
+
+
+def gram_row(x, centers, w=None, *, sigma: float, p: int = 2,
+             interpret: bool | None = None, plan: str | None = None):
+    """Rank-one Gram-row update: one fused pass computing the new row/column
+    of the (optionally weighted) Gram against ALL centers, plus the raw
+    squared distances the online absorption rule needs.
+
+    Returns ``(k_row, d2_row)``, both (m,) f32: k_row[j] = k(x, c_j)
+    (times sqrt(w_j) when ``w`` is given — Algorithm 1's W K W column
+    factor); d2_row[j] = ||x - c_j||^2.  This is the streaming subsystem's
+    per-update hot path (repro/streaming/updates.py): the full m x m Gram is
+    never rebuilt — only this row is.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    centers = jnp.asarray(centers, jnp.float32)
+    m, d = centers.shape
+    assert x.shape == (d,), (x.shape, centers.shape)
+    weighted = w is not None
+    wj = jnp.asarray(w, jnp.float32) if weighted \
+        else jnp.ones((m,), jnp.float32)
+    if plan is None:
+        plan = _gram_row_plan(m, d, interpret)
+    if plan == "dense":
+        return _gram_row_dense(x, centers, wj, sigma=float(sigma), p=int(p),
+                               weighted=weighted)
+    bm = min(512, _round_up(m, 128))
+    bk = min(512, _round_up(d, 128))
+    dpad = _round_up(d, bk) - d
+    cp = centers if dpad == 0 else jnp.pad(centers, ((0, 0), (0, dpad)))
+    xp = jnp.zeros((8, cp.shape[1]), jnp.float32).at[0, :d].set(x)
+    cp = _pad_rows(cp, bm)
+    wp = _pad_rows(wj, bm)
+    krow, d2 = _gram_row_call(xp, cp, wp, sigma=float(sigma), p=int(p),
+                              interpret=bool(interpret), bm=bm, bk=bk,
+                              weighted=weighted)
+    return krow[:m], d2[:m]
+
+
+# --------------------------------------------------------------------------
 # shadow_assign
 # --------------------------------------------------------------------------
 

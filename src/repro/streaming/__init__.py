@@ -1,0 +1,15 @@
+# Streaming RSKPCA (DESIGN.md §6): maintain a fitted reduced-set operator
+# online — insert/remove/replace centers as rank-one perturbations, patch the
+# eigensystem under a tracked Theorem-5.x error budget, detect drift, and
+# hot-swap the serving projector without retracing.
+from repro.streaming.state import (  # noqa: F401
+    StreamingRSKPCA, from_rsde, save, load,
+)
+from repro.streaming.updates import (  # noqa: F401
+    ingest_batch, insert, remove, replace,
+)
+from repro.streaming.ingest import (  # noqa: F401
+    ingest, compact, needs_compaction,
+)
+from repro.streaming.drift import DriftDetector, stream_mmd, refresh  # noqa: F401
+from repro.streaming.swap import HotSwapServer  # noqa: F401

@@ -1,0 +1,91 @@
+"""Host-side ingest driver: fixed-shape batches + alive-mask compaction.
+
+``ingest`` slices an arbitrary stream into FIXED-size batches (ragged tail
+padded and masked), so the whole stream runs through exactly one compiled
+``ingest_batch`` program per batch size — the same fixed-shape contract as
+blocked shadow selection.  Between batches (never inside one) it checks the
+buffer fill fraction and compacts: live slots are packed to the front of a
+fresh power-of-two bucket (so re-jit count stays logarithmic in growth, as
+in ``shadow_select_blocked``'s compaction cascade) and the eigensystem is
+re-solved exactly, which also resets the error budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streaming import updates
+from repro.streaming.state import StreamingRSKPCA, _pow2_ceil, _solve
+
+
+def needs_compaction(state: StreamingRSKPCA, max_fill: float = 0.9) -> bool:
+    """True once the live-slot fraction exceeds ``max_fill`` — the next
+    batch would risk the overflow guard (nearest-center absorption beyond
+    eps), so compact/grow first."""
+    return state.m > max_fill * state.cap
+
+
+def compact(state: StreamingRSKPCA, cap: int | None = None) -> StreamingRSKPCA:
+    """Pack live slots to the front of a (possibly larger) pow2 buffer.
+
+    The Gram cache moves by pure permutation-gather (no kernel evals); the
+    eigensystem is re-solved exactly on the compacted operator (the
+    permuted Ritz vectors would no longer be orthonormal after dropping
+    dead rows), which resets ``err_est`` — compaction doubles as a refresh
+    point.  Changing ``cap`` re-traces downstream programs once per bucket.
+    """
+    w = np.asarray(state.weights)
+    live = np.flatnonzero(w > 0)
+    m = live.size
+    if cap is None:
+        cap = (4 * m) // 3  # same ~1/3 headroom rule as from_rsde
+    cap = _pow2_ceil(max(128, cap, m))
+    centers = np.zeros((cap, state.d), np.float32)
+    centers[:m] = np.asarray(state.centers)[live]
+    weights = np.zeros((cap,), np.float32)
+    weights[:m] = w[live]
+    kgram = np.zeros((cap, cap), np.float32)
+    kgram[:m, :m] = np.asarray(state.kgram)[np.ix_(live, live)]
+    centers = jnp.asarray(centers)
+    weights = jnp.asarray(weights)
+    kgram = jnp.asarray(kgram)
+    lam, u = jax.jit(_solve, static_argnames="rank1")(
+        kgram, weights, state.n, rank1=state.rank + 1)
+    return dataclasses.replace(
+        state, centers=centers, weights=weights, kgram=kgram,
+        eigvals=lam, u=u, err_est=jnp.float32(0.0),
+        resid=jnp.float32(0.0), n_patched=jnp.int32(0))
+
+
+def ingest(state: StreamingRSKPCA, xs, batch: int = 256,
+           detector=None, server=None) -> StreamingRSKPCA:
+    """Stream ``xs`` (N, d) through fixed-shape jitted ingest batches.
+
+    Optional taps: ``detector`` (drift.DriftDetector) sees every raw batch;
+    ``server`` (swap.HotSwapServer) gets the updated operator published
+    after every batch — together they form the full online loop of
+    examples/streaming_drift.py.
+    """
+    xs = np.asarray(xs, np.float32)
+    n = xs.shape[0]
+    for s in range(0, n, batch):
+        blk = xs[s : s + batch]
+        if needs_compaction(state):
+            state = compact(state)
+        if blk.shape[0] < batch:  # ragged tail: pad + mask, same compile
+            pad = np.zeros((batch, xs.shape[1]), np.float32)
+            pad[: blk.shape[0]] = blk
+            ok = np.zeros((batch,), bool)
+            ok[: blk.shape[0]] = True
+            state = updates.ingest_batch(state, jnp.asarray(pad),
+                                         jnp.asarray(ok))
+        else:
+            state = updates.ingest_batch(state, jnp.asarray(blk))
+        if detector is not None:
+            detector.push(blk)
+        if server is not None:
+            server.publish(state)
+    return state

@@ -1,0 +1,73 @@
+"""Hot-swap serving bridge: publish operator updates without retracing.
+
+A live transform stream must not pay a compile when the operator behind it
+evolves.  The contract (the PR-3 bucket-padded serving contract, extended to
+the operator itself): the published ``(centers, projector)`` snapshot always
+has the state's FIXED buffer shapes — (cap, d) and (cap, rank), with dead
+slots carrying zero projector rows so they cannot contribute — and queries
+stream through ``kernels.ops.kpca_project`` in fixed chunks.  Publishing a
+new snapshot therefore changes only array VALUES, never compiled shapes: the
+jitted projection program traced for the first snapshot serves every later
+one (compile-count asserted in tests/test_streaming.py).  Only a capacity
+change (compaction/growth, logarithmically rare) re-traces, once per bucket.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kernel_ops
+from repro.streaming.state import StreamingRSKPCA
+
+
+class HotSwapServer:
+    """Single-writer, many-reader serving handle.
+
+    ``publish`` snapshots the state's padded operator (cheap: two device
+    arrays, no copies of the Gram/eigensystem); ``transform`` embeds
+    queries under the LATEST published operator.  ``version`` counts
+    publishes so readers can tag results with the operator they saw.
+    """
+
+    def __init__(self, state: StreamingRSKPCA | None = None,
+                 chunk: int = 1024):
+        self.chunk = int(chunk)
+        self.version = 0
+        self._snapshot = None  # (centers, projector, kernel), swapped whole
+        if state is not None:
+            self.publish(state)
+
+    def publish(self, state: StreamingRSKPCA) -> int:
+        """Atomically swap in the state's current operator: the snapshot is
+        a SINGLE attribute store (one tuple), so a concurrent reader sees
+        either the old or the new operator, never a mix."""
+        self._snapshot = (jnp.asarray(state.centers),
+                          jnp.asarray(state.projector),
+                          state.kernel)
+        self.version += 1
+        return self.version
+
+    @property
+    def published(self) -> bool:
+        return self._snapshot is not None
+
+    def transform(self, x, mesh=None, axis: str = "data") -> np.ndarray:
+        """Embed queries under the latest published operator; fixed-chunk
+        streaming (ragged tails padded) so any query-size sequence reuses
+        one compiled program per bucket."""
+        # read the snapshot ONCE: a publish() landing mid-call can never
+        # pair the new centers with the old projector
+        snapshot = self._snapshot
+        assert snapshot is not None, "publish() an operator before serving"
+        centers, projector, kernel = snapshot
+        if mesh is not None:
+            from repro.core import distributed as dist
+            z = dist.sharded_kpca_project(
+                x, centers, projector, kernel, mesh,
+                axis=axis, chunk=self.chunk)
+            return np.asarray(z)
+        z = kernel_ops.kpca_project(
+            x, centers, projector,
+            sigma=kernel.sigma, p=kernel.p, chunk=self.chunk,
+            precision=kernel.precision)
+        return np.asarray(z)

@@ -1,0 +1,209 @@
+"""Online insert/remove/replace of reduced-set centers (DESIGN.md §6).
+
+Every update is a RANK-ONE perturbation of the weighted Gram operator:
+
+  * an incoming sample within ``eps`` of a live center is ABSORBED into that
+    center's weight — Algorithm 2's absorption rule applied online; its
+    coordinates are discarded, exactly as in the batch selector;
+  * a sample outside every shadow becomes a NEW center in the first dead
+    slot: the Pallas ``gram_row`` kernel computes the new row/column of the
+    Gram against all centers in one fused pass (the m x m matrix is never
+    rebuilt);
+  * ``remove`` zeroes a center's mass; ``replace`` composes remove + insert
+    in one slot.
+
+Each update's effect on the normalized operator K-tilde/n is bounded in
+closed form by ``core.mmd.weight_update_bound`` (the §5 Theorem machinery
+applied per update; O(1) to evaluate).  The bounds ACCUMULATE in
+``state.err_est``; while the accumulated bound stays within
+``state.budget``, the cached eigensystem is patched by a Rayleigh–Ritz step
+in the old invariant subspace augmented with the touched coordinate
+directions (O(cap^2 r) — no O(cap^3) eigensolve), and beyond the budget the
+maintenance falls back to an exact re-solve and resets the budget.  The
+Rayleigh residual of whatever eigensystem comes out is measured and stored
+in ``state.resid`` — the a-posteriori certificate.
+
+All functions here are jitted pytree -> pytree maps: a whole ingest batch
+(scan over rows + one eigen-maintenance) runs as ONE device program with no
+host round-trips (ingest.py drives them with fixed-size padded batches).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mmd as mmd_mod
+from repro.core.rskpca import _canonicalize_signs
+from repro.kernels import ops as kernel_ops
+from repro.streaming.state import StreamingRSKPCA, _solve
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# eigen-maintenance: Rayleigh-Ritz patch vs exact re-solve
+# --------------------------------------------------------------------------
+
+
+def _rr_patch(kgram: Array, w: Array, n: Array, basis: Array, rank1: int):
+    """Rayleigh–Ritz on span{current eigenvectors, touched coordinate axes}.
+
+    The Ritz pairs of K-tilde/n in this subspace absorb a rank-one update
+    exactly when the operator barely rotated (Theorem 5.x says it barely
+    did, or we would not be patching).  Returns (theta, u, residual) with
+    residual = ||K-tilde/n u - u diag(theta)||_F measured on the way out.
+    """
+    q, _ = jnp.linalg.qr(basis)                         # (cap, b)
+    sw = jnp.sqrt(w)
+    ktq = sw[:, None] * (kgram @ (sw[:, None] * q)) / n  # = (K-tilde/n) Q
+    b = q.T @ ktq
+    b = 0.5 * (b + b.T)
+    theta, s = jnp.linalg.eigh(b)                        # ascending
+    theta = theta[::-1][:rank1]
+    s = s[:, ::-1][:, :rank1]
+    u = q @ s
+    resid = jnp.linalg.norm(ktq @ s - u * theta[None, :])
+    return theta, _canonicalize_signs(u), resid
+
+
+def _maintain(state: StreamingRSKPCA, centers: Array, weights: Array,
+              kgram: Array, n: Array, err: Array,
+              slots: Array) -> StreamingRSKPCA:
+    """Patch-or-resolve decision shared by every update entry point.
+
+    ``err`` already includes the new updates' accumulated Theorem-5.x
+    bounds; ``slots`` are the touched center indices whose coordinate axes
+    augment the Rayleigh–Ritz basis (duplicates and dead-slot no-ops are
+    harmless: QR just sees a rank-deficient tail).
+    """
+    rank1 = state.rank + 1
+    cap = state.cap
+    onehots = jax.nn.one_hot(slots, cap, dtype=jnp.float32).T  # (cap, B)
+    basis = jnp.concatenate([state.u, onehots], axis=1)
+    do_patch = err <= state.budget
+
+    def patch(_):
+        return _rr_patch(kgram, weights, n, basis, rank1)
+
+    def resolve(_):
+        lam, u = _solve(kgram, weights, n, rank1)
+        return lam, u, jnp.float32(0.0)
+
+    lam, u, resid = jax.lax.cond(do_patch, patch, resolve, operand=None)
+    nb = slots.shape[0]
+    return dataclasses.replace(
+        state, centers=centers, weights=weights, kgram=kgram, n=n,
+        eigvals=lam, u=u,
+        err_est=jnp.where(do_patch, err, 0.0),
+        resid=resid,
+        n_patched=jnp.where(do_patch, state.n_patched + nb, 0),
+    )
+
+
+# --------------------------------------------------------------------------
+# batched ingest: absorb-or-insert, one jitted step
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def ingest_batch(state: StreamingRSKPCA, xb: Array,
+                 valid: Array | None = None) -> StreamingRSKPCA:
+    """Absorb-or-insert a (B, d) batch in ONE device program.
+
+    Rows scan sequentially (each row sees the centers the previous row may
+    have inserted — the same order semantics as Algorithm 2), then a single
+    eigen-maintenance covers the whole batch.  ``valid`` masks padding rows
+    (False rows are no-ops), so a ragged stream runs through one compiled
+    shape per batch size.  If the buffer is full, an out-of-shadow row is
+    absorbed into its nearest center anyway (the overflow guard of
+    ``shadow_select``); ingest.py's compaction keeps that rare.
+    """
+    kernel = state.kernel
+    eps2 = jnp.float32(state.eps) ** 2
+    ok_b = jnp.ones(xb.shape[0], bool) if valid is None \
+        else valid.astype(bool)
+
+    def row(carry, inp):
+        centers, w, kgram, n, err = carry
+        x, ok = inp
+        krow, d2 = kernel_ops.gram_row(
+            x, centers, sigma=kernel.sigma, p=kernel.p)
+        alive = w > 0
+        d2m = jnp.where(alive, d2, jnp.inf)
+        j_near = jnp.argmin(d2m)
+        has_free = jnp.any(~alive)
+        absorb = (d2m[j_near] < eps2) | ~has_free
+        j = jnp.where(absorb, j_near, jnp.argmin(alive))  # first dead slot
+        delta = mmd_mod.weight_update_bound(n, n + 1.0, w[j], w[j] + 1.0,
+                                            kappa=kernel.kappa)
+        w = w.at[j].add(jnp.where(ok, 1.0, 0.0))
+        n = n + jnp.where(ok, 1.0, 0.0)
+        err = err + jnp.where(ok, delta, 0.0)
+
+        def insert(args):
+            c, kg = args
+            kr = krow.at[j].set(kernel.kappa)  # k(x, x) for the new slot
+            return c.at[j].set(x), kg.at[j, :].set(kr).at[:, j].set(kr)
+
+        centers, kgram = jax.lax.cond(ok & ~absorb, insert, lambda a: a,
+                                      (centers, kgram))
+        return (centers, w, kgram, n, err), j
+
+    (centers, w, kgram, n, err), slots = jax.lax.scan(
+        row,
+        (state.centers, state.weights, state.kgram, state.n, state.err_est),
+        (jnp.asarray(xb, jnp.float32), ok_b),
+    )
+    return _maintain(state, centers, w, kgram, n, err, slots)
+
+
+def insert(state: StreamingRSKPCA, x) -> StreamingRSKPCA:
+    """Single-sample absorb-or-insert (a B=1 ingest batch)."""
+    return ingest_batch(state, jnp.asarray(x, jnp.float32)[None, :])
+
+
+@jax.jit
+def remove(state: StreamingRSKPCA, j) -> StreamingRSKPCA:
+    """Delete center j: its mass leaves the substitute density entirely —
+    the paper's 'remove samples with minimal effect' (§5), with the effect
+    bounded by remove_bound = kappa sqrt(2 w_j / n).  No-op on dead slots,
+    and REFUSED (no-op) when center j holds all remaining mass: an operator
+    with n = 0 is undefined (every normalization divides by n), so the last
+    live center can only leave via ``replace``."""
+    j = jnp.asarray(j, jnp.int32)
+    w_j = state.weights[j]
+    ok = w_j < state.n  # refuse to empty the operator
+    w_j = jnp.where(ok, w_j, 0.0)
+    delta = mmd_mod.weight_update_bound(
+        state.n, state.n - w_j, w_j, 0.0, kappa=state.kernel.kappa)
+    weights = state.weights.at[j].set(
+        jnp.where(ok, 0.0, state.weights[j]))
+    return _maintain(state, state.centers, weights, state.kgram,
+                     state.n - w_j, state.err_est + delta, j[None])
+
+
+@jax.jit
+def replace(state: StreamingRSKPCA, j, x) -> StreamingRSKPCA:
+    """Swap center j's location for ``x`` (unit mass), composing the remove
+    and insert bounds — the paper's substitute-sample operation done in
+    place, one fused Gram-row pass."""
+    kernel = state.kernel
+    j = jnp.asarray(j, jnp.int32)
+    x = jnp.asarray(x, jnp.float32)
+    w_j = state.weights[j]
+    n1 = state.n - w_j
+    delta = (
+        mmd_mod.weight_update_bound(state.n, n1, w_j, 0.0,
+                                    kappa=kernel.kappa)
+        + mmd_mod.weight_update_bound(n1, n1 + 1.0, 0.0, 1.0,
+                                      kappa=kernel.kappa))
+    krow, _ = kernel_ops.gram_row(x, state.centers, sigma=kernel.sigma,
+                                  p=kernel.p)
+    krow = krow.at[j].set(kernel.kappa)
+    centers = state.centers.at[j].set(x)
+    kgram = state.kgram.at[j, :].set(krow).at[:, j].set(krow)
+    weights = state.weights.at[j].set(1.0)
+    return _maintain(state, centers, weights, kgram, n1 + 1.0,
+                     state.err_est + delta, j[None])

@@ -106,6 +106,30 @@ def test_autotuned_gram_matches_ref(fresh_cache):
     assert any(k.startswith("gram|") for k in disk)
 
 
+def test_disk_cache_defaults_off_under_pytest(monkeypatch):
+    """Without an explicit REPRO_AUTOTUNE_CACHE, a pytest process must
+    neither read nor write the repo-root cache file (hermetic test runs);
+    the in-process cache still works."""
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    assert os.environ.get("PYTEST_CURRENT_TEST")  # pytest sets this
+    assert not autotune._disk_enabled()
+    autotune.clear(in_memory_only=False)
+    key = "hermetic-probe-key"
+    assert autotune.best(
+        key, {"a": lambda: None,
+              "b": lambda: __import__("time").sleep(0.005)},
+        default="b") == "a"
+    # memory has it, the repo-root disk file does not
+    assert autotune._MEM[key]["winner"] == "a"
+    try:
+        with open(autotune._cache_path()) as f:
+            assert key not in json.load(f)
+    except OSError:
+        pass  # no cache file at all: equally hermetic
+    autotune.clear(in_memory_only=False)
+
+
 def test_dense_candidate_capped_for_huge_problems(monkeypatch):
     """Beyond DENSE_MAX_CELLS the dense path must not even be a measurement
     candidate (its intermediates would not fit); the plan must come back

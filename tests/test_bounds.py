@@ -91,6 +91,44 @@ def test_thm54_eigenspace_projection_bound():
             assert dist <= bound + 1e-4
 
 
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(3, 40), d=st.integers(1, 6), seed=st.integers(0, 10**6),
+       kern=st.integers(0, 1), sigma=st.floats(0.3, 2.0),
+       kind=st.integers(0, 2), j=st.integers(0, 10**6))
+def test_online_weight_update_bound(m, d, seed, kern, sigma, kind, j):
+    """The closed-form rank-two bound behind every streaming update
+    (core.mmd.weight_update_bound) must dominate the TRUE Frobenius change
+    of the normalized weighted operator for absorb/insert/remove."""
+    import jax.numpy as jnp
+    from repro.core.kernels_math import gram_matrix
+
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(m, d)).astype(np.float32)
+    w = rng.integers(1, 10, size=m).astype(np.float64)
+    j = j % m
+    if kind == 1:  # insert: model the new center as a live slot of weight 0
+        w[j] = 0.0
+    n = w.sum()
+    if kind == 2 and n <= w[j]:  # removing the only mass: undefined, skip
+        return
+    k = np.asarray(gram_matrix(KERNELS[kern](sigma), jnp.asarray(c)),
+                   np.float64)
+    w2 = w.copy()
+    if kind == 0:    # absorb one sample into center j
+        w2[j] += 1.0
+    elif kind == 1:  # insert a fresh unit-mass center
+        w2[j] = 1.0
+    else:            # remove center j outright
+        w2[j] = 0.0
+    n2 = w2.sum()
+    kt = np.sqrt(w)[:, None] * k * np.sqrt(w)[None, :] / n
+    kt2 = np.sqrt(w2)[:, None] * k * np.sqrt(w2)[None, :] / n2
+    true = np.linalg.norm(kt2 - kt)
+    bound = float(M.weight_update_bound(n, n2, w[j], w2[j],
+                                        kappa=KERNELS[kern](sigma).kappa))
+    assert true <= bound + 1e-6, (true, bound, kind)
+
+
 def test_bounds_tighten_with_ell():
     ker = gaussian(1.0)
     bounds = [ker.mmd_bound(ell) for ell in (2.0, 3.0, 4.0, 6.0, 10.0)]

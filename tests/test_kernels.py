@@ -38,6 +38,30 @@ def test_gram_unweighted(n, m, d):
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("m,d", [(64, 8), (100, 37), (513, 129)])
+@pytest.mark.parametrize("p", [2, 1])
+def test_gram_row_sweep(m, d, p):
+    """Rank-one Gram-row kernel (the streaming update hot path): both plans
+    must match the full-Gram oracle row and the raw squared distances."""
+    rng = np.random.default_rng(hash((m, d, p)) % 2**32)
+    x = rng.normal(size=(d,)).astype(np.float32)
+    c = rng.normal(size=(m, d)).astype(np.float32)
+    w = rng.uniform(0.5, 3, m).astype(np.float32)
+    want_k = np.asarray(ref.gram_ref(jnp.asarray(x[None]), jnp.asarray(c),
+                                     2.5, p))[0]
+    want_d2 = ((c - x[None]) ** 2).sum(1)
+    for plan in ("pallas", "dense"):
+        krow, d2 = ops.gram_row(x, c, sigma=2.5, p=p, plan=plan)
+        np.testing.assert_allclose(np.asarray(krow), want_k,
+                                   atol=3e-5, rtol=3e-5)
+        np.testing.assert_allclose(np.asarray(d2), want_d2,
+                                   atol=1e-3, rtol=1e-4)
+        # weighted form fuses Algorithm 1's sqrt(w) column factor
+        krow_w, _ = ops.gram_row(x, c, w, sigma=2.5, p=p, plan=plan)
+        np.testing.assert_allclose(np.asarray(krow_w), want_k * np.sqrt(w),
+                                   atol=3e-5, rtol=3e-5)
+
+
 def test_weighted_gram_is_algorithm1_ktilde():
     """ops.weighted_gram == W K^C W of Algorithm 1 (vs core implementation)."""
     from repro.core.kernels_math import weighted_gram as core_wg, gaussian

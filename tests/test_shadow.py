@@ -147,6 +147,68 @@ def test_streaming_two_level_cover(n, d, eps, seed):
     assert (dist < 2 * eps + 1e-5).all()
 
 
+def test_streaming_ragged_final_block():
+    """The last chunk can be far smaller than ``chunk`` (and smaller than
+    ``block``); its centers must still merge into a valid 2*eps cover."""
+    x = _data(101, 4, 5)  # chunk=32 -> chunks of 32,32,32,5
+    for eps in (0.1, 0.25):
+        c, w, a, m = shadow_select_streaming(x, eps, chunk=32, block=8)
+        assert abs(w.sum() - 101) < 1e-3
+        assert (a >= 0).all() and (a < m).all()
+        dist = np.linalg.norm(x - c[a], axis=1)
+        assert (dist < 2 * eps + 1e-5).all()
+
+
+def test_two_level_merge_block_fully_absorbed():
+    """A partition whose centers are ALL within eps of an earlier
+    partition's centers must contribute zero surviving centers — only its
+    weight mass."""
+    x = _data(200, 4, 8)
+    eps = 0.2
+    c1, w1, _, m1 = shadow_select_host(x, eps)
+    # second "shard" re-selects the SAME data: every candidate lies within
+    # eps of (in fact on top of) a first-shard center
+    all_c = jnp.asarray(np.concatenate([c1, c1]))
+    all_w = jnp.asarray(np.concatenate([w1, w1]), jnp.float32)
+    out_c, out_w, m = two_level_merge(all_c, all_w, jnp.float32(eps),
+                                      max_centers=len(all_c))
+    m = int(m)
+    assert m == m1  # zero survivors from the absorbed block
+    np.testing.assert_allclose(np.asarray(out_c[:m]), c1, atol=1e-6)
+    assert abs(float(out_w[:m].sum()) - 2 * len(x)) < 1e-3  # mass conserved
+
+
+def test_two_level_merge_unequal_weight_partitions():
+    """Shards of very different sizes (so very different weight scales)
+    must merge into a cover that conserves total mass exactly."""
+    x = _data(330, 3, 12)
+    eps = 0.25
+    parts = [x[:10], x[10:50], x[50:]]  # 10 / 40 / 280 rows
+    cs, ws = [], []
+    for part in parts:
+        c, w, _, _ = shadow_select_host(part, eps)
+        cs.append(c)
+        ws.append(w)
+    all_c = jnp.asarray(np.concatenate(cs))
+    all_w = jnp.asarray(np.concatenate(ws), jnp.float32)
+    out_c, out_w, m = two_level_merge(all_c, all_w, jnp.float32(eps),
+                                      max_centers=len(all_c))
+    m = int(m)
+    assert abs(float(out_w[:m].sum()) - len(x)) < 1e-3
+    assert (np.asarray(out_w[:m]) > 0).all()
+    d = np.linalg.norm(x[:, None] - np.asarray(out_c[:m])[None], axis=2).min(1)
+    assert (d < 2 * eps + 1e-5).all()
+
+
+def test_blocked_whole_block_absorbed_in_one_round():
+    """eps larger than the data diameter: the first round's single keeper
+    absorbs every row (no survivors for later rounds)."""
+    rng = np.random.default_rng(0)
+    x = (0.01 * rng.normal(size=(150, 3))).astype(np.float32)
+    c, w, a, m = shadow_select_blocked(x, 10.0, block=64)
+    assert m == 1 and w.sum() == 150 and (a == 0).all()
+
+
 def test_max_centers_overflow_guard():
     x = _data(100, 4, 11)
     c, w, a, m = (None,) * 4

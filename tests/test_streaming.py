@@ -1,0 +1,228 @@
+"""Streaming RSKPCA (DESIGN.md §6): online insert/remove/replace vs
+from-scratch refits, the tracked Theorem-5.x error budget, recompile-free
+hot swap, drift-triggered refresh, and checkpoint roundtrip."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import gaussian, shadow_rsde, fit_rskpca
+from repro.core.rskpca import embedding_alignment_error
+from repro import streaming
+from repro.streaming import updates
+from repro.kernels import ops as kernel_ops
+
+ELL = 1.6
+SIGMA = 1.5
+RANK = 4
+
+
+def _blobs(n, d=6, seed=0, shift=0.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0, 4, (8, d))
+    idx = rng.integers(0, 8, n)
+    return (centers[idx] + 0.3 * rng.normal(size=(n, d))
+            + shift).astype(np.float32)
+
+
+def _setup(precision="f32", budget=0.0, n=400, seed=0):
+    x = _blobs(n, seed=seed)
+    ker = gaussian(SIGMA, precision=precision)
+    rsde = shadow_rsde(x, ker, ell=ELL)
+    st = streaming.from_rsde(rsde, ker, RANK, ell=ELL, budget=budget)
+    return x, ker, st
+
+
+def _rel_align(z_ref, z) -> float:
+    return embedding_alignment_error(z_ref, z) / np.linalg.norm(z_ref)
+
+
+def test_from_rsde_matches_batch_fit():
+    x, ker, st = _setup()
+    mdl = fit_rskpca(shadow_rsde(x, ker, ell=ELL), ker, RANK)
+    q = _blobs(64, seed=9)
+    np.testing.assert_allclose(np.asarray(st.transform(q)), mdl.transform(q),
+                               atol=2e-5, rtol=2e-4)
+    assert st.cap % 128 == 0 and st.cap >= st.m
+
+
+def test_streaming_exact_when_budget_zero():
+    """budget=0 forces an exact re-solve at every maintenance: the evolving
+    state must track a from-scratch fit on the equivalent center set to fp
+    noise through interleaved insert/remove/replace."""
+    rng = np.random.default_rng(3)
+    x, ker, st = _setup(budget=0.0)
+    q = _blobs(64, seed=9)
+    for rnd in range(3):
+        batch = _blobs(16, seed=100 + rnd, shift=0.4 * rnd)
+        st = updates.ingest_batch(st, jnp.asarray(batch))
+        live = np.flatnonzero(np.asarray(st.weights) > 0)
+        st = updates.remove(st, int(live[rng.integers(live.size)]))
+        live = np.flatnonzero(np.asarray(st.weights) > 0)
+        st = updates.replace(st, int(live[rng.integers(live.size)]),
+                             batch[rnd] + 0.1)
+        assert float(st.err_est) == 0.0 and float(st.resid) == 0.0
+        mdl = fit_rskpca(st.as_rsde(), ker, RANK)
+        z_ref = mdl.transform(q)
+        z_str = np.asarray(st.transform(q))
+        assert _rel_align(z_ref, z_str) < 1e-4, rnd
+        np.testing.assert_allclose(np.asarray(st.eigvals[:RANK]),
+                                   mdl.eigvals, atol=1e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("precision,tol", [("f32", 1e-3), ("bf16", 4e-2)])
+def test_streaming_property_within_tracked_budget(precision, tol):
+    """The acceptance property: after K interleaved insert/remove/replace
+    updates, the streaming projection matches a from-scratch fit_rskpca on
+    the equivalent center set to within the Theorem-5.x bound tracked in
+    the state's error budget (Davis-Kahan through the measured residual,
+    which itself must sit below the tracked accumulation)."""
+    rng = np.random.default_rng(5)
+    x, ker, st = _setup(precision=precision, budget=0.05)
+    q = _blobs(64, seed=9)
+    for rnd in range(4):
+        batch = _blobs(12, seed=200 + rnd, shift=0.3 * rnd)
+        st = updates.ingest_batch(st, jnp.asarray(batch))
+        live = np.flatnonzero(np.asarray(st.weights) > 0)
+        st = updates.remove(st, int(live[rng.integers(live.size)]))
+        live = np.flatnonzero(np.asarray(st.weights) > 0)
+        st = updates.replace(st, int(live[rng.integers(live.size)]),
+                             batch[0] + 0.2)
+        # budget invariants: maintenance never leaves err_est above budget,
+        # and the measured Rayleigh residual sits below the tracked
+        # accumulated Theorem-5.x bound (it is the a-posteriori certificate
+        # of exactly that perturbation)
+        assert float(st.err_est) <= st.budget + 1e-6
+        assert float(st.resid) <= 2.0 * float(st.err_est) + 1e-3
+        assert abs(float(np.asarray(st.weights).sum()) - float(st.n)) < 0.5
+    mdl = fit_rskpca(st.as_rsde(), ker, RANK)
+    z_ref = mdl.transform(q)
+    z_str = np.asarray(st.transform(q))
+    lam = np.asarray(st.eigvals, np.float64)
+    gap = max(float(lam[RANK - 1] - lam[RANK]), 1e-9)
+    cond = np.sqrt(max(lam[0], 1e-12) / max(lam[RANK - 1], 1e-12))
+    # Davis-Kahan: sin(theta) <= resid/gap <= (tracked err_est)/gap; the
+    # aligned projection error inherits it scaled by the rank-block
+    # conditioning.  4x safety + a dtype floor.
+    bound = tol + 4.0 * float(st.err_est) / gap * cond
+    assert _rel_align(z_ref, z_str) <= bound
+    # eigenvalues: Weyl through the same tracked perturbation
+    np.testing.assert_allclose(
+        np.asarray(st.eigvals[:RANK], np.float64), mdl.eigvals.astype(np.float64),
+        atol=float(st.err_est) + float(st.resid) + tol * float(lam[0]) + 1e-6)
+
+
+def test_hot_swap_is_recompile_free():
+    """A jitted transform stream must observe an operator update without
+    retracing (same style as the PR-3 ragged-chunk serving assertion)."""
+    x, ker, st = _setup(budget=0.05)
+    srv = streaming.HotSwapServer(st, chunk=256)
+    q_warm = _blobs(300, seed=21)
+    q = _blobs(412, seed=22)
+    srv.transform(q_warm)  # settle the trace + the autotuned plan
+    srv.transform(q)
+    before = kernel_ops.projection_compile_count()
+    z1 = srv.transform(q)
+    st = updates.ingest_batch(
+        st, jnp.asarray(_blobs(24, seed=23, shift=2.0)))
+    assert srv.publish(st) == 2
+    z2 = srv.transform(q)
+    after = kernel_ops.projection_compile_count()
+    assert after == before, (before, after)
+    assert np.abs(z1 - z2).max() > 1e-6  # the operator really moved
+    assert z2.shape == (412, RANK)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    x, ker, st = _setup(budget=0.05)
+    st = updates.ingest_batch(st, jnp.asarray(_blobs(16, seed=31, shift=1.0)))
+    streaming.save(st, str(tmp_path), step=7)
+    st2 = streaming.load(str(tmp_path))
+    assert (st2.kernel, st2.rank, st2.eps, st2.budget) == \
+        (st.kernel, st.rank, st.eps, st.budget)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    q = _blobs(32, seed=33)
+    np.testing.assert_allclose(np.asarray(st.transform(q)),
+                               np.asarray(st2.transform(q)), atol=1e-6)
+    # the restored state keeps evolving
+    st3 = updates.ingest_batch(st2, jnp.asarray(_blobs(8, seed=34)))
+    assert float(st3.n) == float(st2.n) + 8
+
+
+def test_drift_detector_and_partial_refresh():
+    x, ker, st = _setup(budget=0.05)
+    det = streaming.DriftDetector(ker, ell=ELL, window=128, factor=0.55)
+    det.push(_blobs(128, seed=41))  # in-distribution: below threshold
+    assert det.full
+    assert det.mmd(st) <= det.threshold, (det.mmd(st), det.threshold)
+    assert not det.should_refresh(st)
+    # drift: the stream collapses onto a new mode the operator never saw
+    rng = np.random.default_rng(42)
+    mode = (np.full((1, x.shape[1]), 8.0)
+            + 0.3 * rng.normal(size=(128, x.shape[1]))).astype(np.float32)
+    det.push(mode)
+    assert det.should_refresh(st)
+    mmd_before = det.mmd(st)
+    st2 = streaming.refresh(st, det.window(), decay=0.2)
+    assert det.mmd(st2) < min(mmd_before, det.threshold)  # back under
+    assert float(st2.err_est) == 0.0  # refresh re-solves exactly
+    z = np.asarray(st2.transform(mode[:16]))
+    assert np.isfinite(z).all() and np.abs(z).max() > 0
+
+
+def test_ingest_ragged_stream_and_compaction():
+    x, ker, st = _setup(budget=0.05, n=300)
+    stream = _blobs(333, seed=51, shift=1.0)  # ragged vs batch=64
+    st2 = streaming.ingest(st, stream, batch=64)
+    assert abs(float(st2.n) - float(st.n) - 333) < 1e-2
+    assert abs(float(np.asarray(st2.weights).sum()) - float(st2.n)) < 0.5
+    assert streaming.needs_compaction(st2, max_fill=0.0)
+    stc = streaming.compact(st2)
+    assert stc.m == st2.m
+    assert float(stc.n) == float(st2.n)
+    # compaction is exact: pure permutation-gather + exact re-solve
+    mdl = fit_rskpca(stc.as_rsde(), ker, RANK)
+    q = _blobs(48, seed=52)
+    assert _rel_align(mdl.transform(q), np.asarray(stc.transform(q))) < 1e-4
+
+
+def test_buffer_overflow_falls_back_to_nearest_absorb():
+    x, ker, st = _setup(budget=0.05)
+    cap = st.cap
+    far = _blobs(2 * cap, seed=61, shift=20.0)  # out-of-shadow flood
+    st2 = streaming.ingest(st, far, batch=128)
+    assert st2.m <= st2.cap  # never exceeds the buffer
+    # mass is conserved even through the overflow guard
+    assert abs(float(np.asarray(st2.weights).sum()) - float(st2.n)) < 0.5
+
+
+def test_remove_refuses_to_empty_the_operator():
+    """Removing every live center would drive n to 0 (every normalization
+    divides by n): deleting the LAST live mass must be a refused no-op, and
+    the state must stay finite throughout the teardown."""
+    x, ker, st = _setup(budget=0.05)
+    for j in np.flatnonzero(np.asarray(st.weights) > 0):
+        st = updates.remove(st, int(j))
+    assert float(st.n) > 0  # the last center's mass survived
+    assert st.m == 1
+    assert np.isfinite(np.asarray(st.eigvals)).all()
+    z = np.asarray(st.transform(_blobs(8, seed=81)))
+    assert np.isfinite(z).all()
+    # ...but replace CAN move the last center (mass stays positive)
+    st = updates.replace(st, int(np.argmax(np.asarray(st.weights))),
+                         _blobs(1, seed=82)[0])
+    assert float(st.n) > 0 and np.isfinite(np.asarray(st.eigvals)).all()
+
+
+def test_streaming_mesh_transform_matches_single_device():
+    from repro.launch.mesh import data_mesh
+    x, ker, st = _setup()
+    mesh = data_mesh(1)
+    q = _blobs(70, seed=71)
+    z0 = np.asarray(st.transform(q))
+    z1 = np.asarray(st.transform(q, mesh=mesh))
+    np.testing.assert_allclose(z0, z1, atol=1e-5, rtol=1e-4)
+    srv = streaming.HotSwapServer(st)
+    np.testing.assert_allclose(srv.transform(q, mesh=mesh), z0,
+                               atol=1e-5, rtol=1e-4)
