@@ -10,12 +10,14 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
-# fast (~1-2 min) perf smoke: seed-vs-current RSKPCA fit/transform at
-# n in {2k,8k,32k}, interleaved min-of-reps timing; refreshes
+# perf smoke: seed-vs-current RSKPCA fit/transform at n in {2k,8k,32k}
+# (interleaved min-of-reps timing) PLUS the matrix-free fit gate at m=8192
+# (mode=matfree row; asserts no m x m buffer via XLA memory analysis and
+# fit_speedup >= 1.0 vs the seed dense Gram + full eigh).  Refreshes
 # BENCH_rskpca.json so every PR leaves a perf trajectory point, and fails
 # if any freshly-measured row has fit_speedup < 1.0
 bench-smoke:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke --matfree
 
 # smoke + the sharded mixed-precision path: appends sharded/bf16 rows
 # (multi-host-device mesh, bf16 MXU operands) to BENCH_rskpca.json

@@ -34,6 +34,47 @@ BENCH_JSON = os.path.join(
     "BENCH_rskpca.json")
 
 
+def _row_key(r: dict):
+    """Identity of a bench row: its mode plus the scale axis it varies
+    (n for the fit/transform benches, m for the synthetic-center ones)."""
+    return (r.get("mode"), r["n"]) if "n" in r else (r.get("mode"), r.get("m"))
+
+
+def merge_rows(old_rows: list, fresh_rows: list) -> list:
+    """Merge freshly-measured rows into the accumulated BENCH file rows.
+
+    Any old row — fresh OR ``"stale": true`` — whose (scale, mode) identity
+    was re-measured is DROPPED in favor of the new measurement, so stale
+    markers never outlive a refresh of their pair; rows of pairs not touched
+    this run are preserved untouched.
+    """
+    fresh_keys = {_row_key(r) for r in fresh_rows}
+    return [r for r in old_rows if _row_key(r) not in fresh_keys] + fresh_rows
+
+
+def _merge_into_bench(fresh_rows: list) -> None:
+    """Shared read -> merge -> write for the mode= bench writers
+    (bench_sharded / bench_stream / bench_matfree).
+
+    Surviving old rows of the SAME mode as this run's fresh rows were NOT
+    re-measured (e.g. a stream row at an m outside the current sweep), so
+    they are stale-marked — the perf gates must never read a number this
+    run did not take.  bench_fit applies the same rule to every mode= row
+    when it rewrites the whole file.
+    """
+    try:
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = {"bench": "rskpca_fit_transform", "rows": []}
+    modes = {r.get("mode") for r in fresh_rows}
+    old = [dict(r, stale=True) if r.get("mode") in modes else r
+           for r in doc.get("rows", [])]
+    doc["rows"] = merge_rows(old, fresh_rows)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2)
+
+
 def _seed_fit(x, ker, rank, ell):
     """The seed PR's fit path, replicated verbatim for the perf baseline:
     sequential selection + dense Gram + full O(m^3) eigh."""
@@ -135,17 +176,19 @@ def bench_fit(fast: bool = True):
         rows.append(row)
         emit(f"rskpca_fit_n{n}", best["fit_new"] * 1e6, **{
             k: v for k, v in row.items() if k not in ("n",)})
-    # preserve any sharded/bf16 rows a previous bench_sharded appended — a
-    # plain --smoke refresh must not silently delete them — but mark them
-    # stale: their numbers were NOT re-measured this run, so the perf gate
-    # must not treat them as fresh evidence either way (bench_sharded
-    # replaces them with fresh measurements)
+    # preserve any mode= rows a previous bench_sharded/bench_stream/
+    # bench_matfree appended — a plain --smoke refresh must not silently
+    # delete them — but mark them stale: their numbers were NOT re-measured
+    # this run, so the perf gate must not treat them as fresh evidence
+    # either way.  merge_rows drops a stale row the moment its (scale, mode)
+    # pair is re-measured.
     try:
         with open(BENCH_JSON) as f:
-            rows += [dict(r, stale=True)
-                     for r in json.load(f)["rows"] if "mode" in r]
+            old = [dict(r, stale=True)
+                   for r in json.load(f)["rows"] if "mode" in r]
     except (OSError, ValueError, KeyError):
-        pass
+        old = []
+    rows = merge_rows(old, rows)
     with open(BENCH_JSON, "w") as f:
         json.dump({"bench": "rskpca_fit_transform", "rank": rank, "ell": ell,
                    "backend_default": "pallas(interpret on CPU)",
@@ -207,8 +250,6 @@ def bench_sharded(precision: str = "bf16"):
     multi-host-device subprocess; the child re-measures the seed baseline
     in-process (interleaved) so its speedups are same-machine-state ratios.
     """
-    with open(BENCH_JSON) as f:
-        doc = json.load(f)
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
@@ -219,7 +260,7 @@ def bench_sharded(precision: str = "bf16"):
     if r.returncode != 0:
         print(r.stderr[-3000:])
         raise SystemExit("bench_sharded child failed")
-    rows = [row for row in doc["rows"] if row.get("mode") != f"sharded+{precision}"]
+    fresh = []
     for line in r.stdout.splitlines():
         if not line.startswith("SHARD"):
             continue
@@ -236,18 +277,16 @@ def bench_sharded(precision: str = "bf16"):
             transform_s=round(tr_s, 4),
             transform_speedup=round(seed_tr_s / tr_s, 2),
         )
-        rows.append(row)
+        fresh.append(row)
         emit(f"rskpca_shard_{precision}_n{n}", fit_s * 1e6, **{
             k: v for k, v in row.items() if k != "n"})
-    doc["rows"] = rows
-    with open(BENCH_JSON, "w") as f:
-        json.dump(doc, f, indent=2)
+    _merge_into_bench(fresh)
     print(f"# appended sharded rows to {BENCH_JSON}", flush=True)
-    return rows
+    return fresh
 
 def bench_stream(fast: bool = True, ms=(256, 1024, 4096), rank: int = 8):
     """Streaming scenario: per-update cost of the incremental operator
-    patch (rank-one Gram row + Rayleigh-Ritz eigen-update, DESIGN.md §6)
+    patch (rank-one Gram row + Rayleigh-Ritz eigen-update, DESIGN.md §7)
     vs a FULL refit on the equivalent center set, at m live centers.
 
     Appends ``mode="stream"`` rows to BENCH_rskpca.json; run.py --stream
@@ -316,16 +355,105 @@ def bench_stream(fast: bool = True, ms=(256, 1024, 4096), rank: int = 8):
         emit(f"rskpca_stream_m{m}", update_s * 1e6,
              **{k: v for k, v in row.items() if k != "m"})
 
-    try:
-        with open(BENCH_JSON) as f:
-            doc = json.load(f)
-    except (OSError, ValueError):
-        doc = {"bench": "rskpca_fit_transform", "rows": []}
-    doc["rows"] = [r for r in doc["rows"] if r.get("mode") != "stream"] + rows
-    with open(BENCH_JSON, "w") as f:
-        json.dump(doc, f, indent=2)
+    _merge_into_bench(rows)
     print(f"# appended stream rows to {BENCH_JSON}", flush=True)
     return rows
+
+
+def bench_matfree(m: int = 8192, d: int = 16, rank: int = 8):
+    """Matrix-free fit at m centers (DESIGN.md §6): wall-clock vs the SEED
+    dense fit path (dense Gram + full eigh) on the same synthetic center
+    set, plus the structural no-m x m-buffer assertions.
+
+    Appends a ``mode="matfree"`` row to BENCH_rskpca.json; run.py gates on
+    ``fit_speedup >= 1.0`` and on the peak-memory ratio.  Centers are
+    synthesized directly (as bench_stream does) because growing a REAL
+    m=8192 cover through sequential seed selection would take the smoke far
+    past its budget — the fit-path comparison is identical either way.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gaussian
+    from repro.core.rskpca import _fit_rskpca_device
+    from repro.core.kernels_math import gram_matrix_dense
+    from repro.kernels import ops as kernel_ops
+
+    assert kernel_ops.matfree_fit(m), \
+        f"m={m} sits below the matrix-free crossover; raise m"
+    rng = np.random.default_rng(0)
+    c = (rng.normal(size=(m, d)) * 3.0).astype(np.float32)
+    w = rng.integers(1, 8, m).astype(np.float32)
+    n = float(w.sum())
+    ker = gaussian(1.0)
+
+    # --- structural assertion: the compiled matfree fit holds NO (m, m)
+    # buffer; the materialized path's peak temp is dominated by exactly one.
+    # memory_analysis() needs only compilation, never an execution.
+    def lower(matfree):
+        return _fit_rskpca_device.lower(
+            jnp.asarray(c), jnp.asarray(w), jnp.float32(n), ker, rank,
+            matfree=matfree)
+
+    mf_lowered = lower(True)
+    assert f"{m}x{m}" not in mf_lowered.as_text(), \
+        "matrix-free fit lowered an m x m tensor"
+    mf_temp = mf_lowered.compile().memory_analysis().temp_size_in_bytes
+    gram_temp = lower(False).compile().memory_analysis().temp_size_in_bytes
+    ratio = gram_temp / max(mf_temp, 1)
+    assert gram_temp >= 4 * m * m, (gram_temp, m)   # sanity: Gram is there
+    assert ratio >= 4.0, \
+        f"matfree peak temp only {ratio:.1f}x below the materialized path"
+
+    # --- seed dense path (one timed pass: LAPACK eigh dominates at ~m^3,
+    # so compile noise is irrelevant and a warmup pass would double a
+    # minutes-long measurement for nothing)
+    t0 = time.perf_counter()
+    cj = jnp.asarray(c)
+    sw = jnp.sqrt(jnp.asarray(w))
+    kt = gram_matrix_dense(ker, cj, cj) * sw[:, None] * sw[None, :] \
+        / jnp.float32(n)
+    lam_s, v_s = jnp.linalg.eigh(kt)
+    lam_s = jnp.maximum(lam_s[::-1][:rank], 1e-12)
+    proj_s = (sw[:, None] * v_s[:, ::-1][:, :rank]) \
+        / jnp.sqrt(lam_s)[None, :] / np.sqrt(n)
+    jax.block_until_ready(proj_s)
+    seed_s = time.perf_counter() - t0
+    lam_s = np.asarray(lam_s)
+    del kt, v_s, proj_s
+
+    # --- matrix-free fit: warmup (compile + autotune), then min-of-2
+    def run_mf():
+        lam, proj = _fit_rskpca_device(jnp.asarray(c), jnp.asarray(w),
+                                       jnp.float32(n), ker, rank,
+                                       matfree=True)
+        jax.block_until_ready(proj)
+        return lam, proj
+
+    run_mf()
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        lam_mf, _ = run_mf()
+        best = min(best, time.perf_counter() - t0)
+
+    # eigenvalue agreement with the seed solve (the row is meaningless if
+    # the fast path computed a different operator)
+    rel = float(np.max(np.abs(np.asarray(lam_mf) - lam_s) / lam_s))
+    assert rel < 5e-3, f"matfree eigenvalues off by {rel:.2e}"
+
+    row = dict(
+        m=m, mode="matfree", d=d, rank=rank,
+        fit_seed_s=round(seed_s, 4), fit_s=round(best, 4),
+        fit_speedup=round(seed_s / best, 2),
+        temp_bytes_matfree=int(mf_temp), temp_bytes_gram=int(gram_temp),
+        peak_mem_ratio=round(ratio, 1),
+    )
+    emit(f"rskpca_matfree_m{m}", best * 1e6,
+         **{k: v for k, v in row.items() if k != "m"})
+    _merge_into_bench([row])
+    print(f"# appended matfree row to {BENCH_JSON}", flush=True)
+    return [row]
 
 
 _CHILD = """

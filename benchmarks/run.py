@@ -25,11 +25,33 @@ def _assert_no_fit_regression() -> None:
           f"rows", flush=True)
 
 
+def _assert_matfree_row() -> None:
+    """Acceptance gate for the matrix-free fit (ISSUE 5): a freshly-measured
+    mode="matfree" row at m >= 8192 must exist, beat the seed dense path
+    (fit_speedup >= 1.0), and show peak temp memory >= 4x below the
+    Gram-materializing path (the no-m x m-buffer certificate measured by
+    bench_matfree via XLA's memory analysis)."""
+    import json
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows
+             if r.get("mode") == "matfree" and not r.get("stale")]
+    assert fresh, "no fresh matfree row was measured"
+    bad = [r for r in fresh
+           if r["m"] < 8192 or r["fit_speedup"] < 1.0
+           or r["peak_mem_ratio"] < 4.0]
+    assert not bad, f"matfree gate failed: {bad}"
+    print(f"# matfree gate passed on {len(fresh)} row(s): "
+          f"speedup {fresh[0]['fit_speedup']}x, "
+          f"peak-mem ratio {fresh[0]['peak_mem_ratio']}x", flush=True)
+
+
 def _assert_stream_speedup() -> None:
     """Perf gate for the streaming subsystem: every freshly-measured
     mode="stream" row must show the incremental operator patch beating a
     full refit (update_speedup >= 1.0; at m=4096 the expectation is >=5x —
-    see DESIGN.md §6)."""
+    see DESIGN.md §7)."""
     import json
     from benchmarks.rskpca_scale import BENCH_JSON
     with open(BENCH_JSON) as f:
@@ -58,6 +80,11 @@ def main() -> None:
                          "rows to BENCH_rskpca.json")
     ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
                     help="precision for the --mesh sharded rows")
+    ap.add_argument("--matfree", action="store_true",
+                    help="with --smoke: bench the matrix-free fit at m=8192 "
+                         "(vs the seed dense Gram + full eigh path), assert "
+                         "no m x m buffer is materialized, and append a "
+                         "mode=matfree row to BENCH_rskpca.json")
     ap.add_argument("--stream", action="store_true",
                     help="streaming bench: per-update incremental patch vs "
                          "full refit at m in {256,1024,4096}; appends "
@@ -67,6 +94,9 @@ def main() -> None:
     fast = not args.full
     if args.mesh and not args.smoke:
         ap.error("--mesh requires --smoke (the sharded bench extends the "
+                 "smoke's BENCH_rskpca.json)")
+    if args.matfree and not args.smoke:
+        ap.error("--matfree requires --smoke (the matfree bench extends the "
                  "smoke's BENCH_rskpca.json)")
 
     if args.stream:
@@ -84,6 +114,10 @@ def main() -> None:
         if args.mesh:
             print("# --- sharded fit/transform ---", flush=True)
             rskpca_scale.bench_sharded(precision=args.precision)
+        if args.matfree:
+            print("# --- matrix-free fit (m=8192) ---", flush=True)
+            rskpca_scale.bench_matfree()
+            _assert_matfree_row()
         _assert_no_fit_regression()
         return
 

@@ -1,4 +1,4 @@
-"""Streaming drift demo (DESIGN.md §6): the full online loop.
+"""Streaming drift demo (DESIGN.md §7): the full online loop.
 
     PYTHONPATH=src python examples/streaming_drift.py
 
@@ -46,7 +46,7 @@ def report(tag, state, det, rel_err):
 
 def rel_error_vs_refit(state, queries):
     """Aligned projection error of the LIVE operator vs a from-scratch
-    fit_rskpca on the equivalent center set — the §6 acceptance metric."""
+    fit_rskpca on the equivalent center set — the §7 acceptance metric."""
     mdl = fit_rskpca(state.as_rsde(), state.kernel, state.rank)
     z_ref = mdl.transform(queries)
     z_live = np.asarray(state.transform(queries))

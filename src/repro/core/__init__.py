@@ -17,6 +17,7 @@ from repro.core.rskpca import (  # noqa: F401
     KPCAModel, fit, fit_rskpca, fit_kpca, fit_subsampled_kpca,
     embedding_alignment_error, eigenvalue_error,
 )
+from repro.core.pipeline import fit_shadow_fused  # noqa: F401
 from repro.core.nystrom import fit_nystrom, fit_weighted_nystrom  # noqa: F401
 from repro.core import mmd  # noqa: F401
 from repro.core.mmd import (  # noqa: F401

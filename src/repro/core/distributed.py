@@ -239,38 +239,62 @@ def sharded_kpca_project(x, centers, projector, kernel: Kernel, mesh: Mesh,
 
 
 @partial(jax.jit,
-         static_argnames=("kernel", "rank", "mesh", "axis", "lobpcg_min_m"))
+         static_argnames=("kernel", "rank", "mesh", "axis", "lobpcg_min_m",
+                          "matfree"))
 def _fit_rskpca_sharded(c: Array, w: Array, n: Array, kernel: Kernel,
                         rank: int, mesh: Mesh, axis: str,
-                        lobpcg_min_m: int):
+                        lobpcg_min_m: int, matfree: bool = False):
     """Algorithm 1 with the Gram assembly sharded over center rows and, for
     large m, the LOBPCG matvec distributed the same way — the m x m operator
-    never needs to be replicated; only the (m, r) projector is."""
-    from repro.core.rskpca import _canonicalize_signs
+    never needs to be replicated; only the (m, r) projector is.
+
+    ``matfree=True`` (DESIGN.md §6) goes one step further: the sharded m x m
+    operator is never ASSEMBLED either.  Each device runs the fused
+    ``gram_matvec`` Pallas kernel on its row-tile of centers against the
+    replicated center set, so per-device peak memory is O(m_loc * r + tiles)
+    instead of O(m_loc * m) — the pod-scale analogue of the single-device
+    matrix-free fit.
+    """
+    from repro.core.rskpca import _canonicalize_signs, _lobpcg_topk
 
     sw = jnp.sqrt(w)
-    kt = sharded_weighted_gram(c, w, kernel, mesh, axis=axis) / n
     m_pad = c.shape[0]
-    if m_pad > lobpcg_min_m and 5 * rank < m_pad:
-        from jax.experimental.sparse.linalg import lobpcg_standard
-
+    if matfree:
+        # honored UNCONDITIONALLY: the caller asked for the memory contract,
+        # so the sharded Gram is never assembled regardless of the wall-clock
+        # crossover (the single-device matfree branch behaves the same way)
         def matvec(v):
-            def blk(k_loc, v_rep):
-                return jnp.dot(k_loc, v_rep,
-                               preferred_element_type=jnp.float32)
-            return shard_map(
-                blk, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
+            def blk(c_loc, w_loc, c_rep, w_rep, v_rep):
+                return kernel_ops.gram_matvec(
+                    c_loc, c_rep, v_rep, wx=w_loc, wy=w_rep,
+                    sigma=kernel.sigma, p=kernel.p,
+                    precision=kernel.precision, allow_dense=False)
+            out = shard_map(
+                blk, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(None, None), P(None),
+                          P(None, None)),
                 out_specs=P(axis, None), check_vma=False,
-            )(kt, v)
+            )(c, w, c, w, v)
+            return out / n
 
-        x0 = jax.random.normal(jax.random.PRNGKey(0), (m_pad, rank),
-                               kt.dtype)
-        lam, u, _ = lobpcg_standard(matvec, x0, m=100)
-        u = _canonicalize_signs(u)
+        lam, u = _lobpcg_topk(matvec, m_pad, rank)
     else:
-        lam, u = jnp.linalg.eigh(kt)  # ascending
-        lam = lam[::-1][:rank]
-        u = _canonicalize_signs(u[:, ::-1][:, :rank])
+        kt = sharded_weighted_gram(c, w, kernel, mesh, axis=axis) / n
+        if m_pad > lobpcg_min_m and 5 * rank < m_pad:
+            def matvec(v):
+                def blk(k_loc, v_rep):
+                    return jnp.dot(k_loc, v_rep,
+                                   preferred_element_type=jnp.float32)
+                return shard_map(
+                    blk, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
+                    out_specs=P(axis, None), check_vma=False,
+                )(kt, v)
+
+            lam, u = _lobpcg_topk(matvec, m_pad, rank)
+        else:
+            lam, u = jnp.linalg.eigh(kt)  # ascending
+            lam = lam[::-1][:rank]
+            u = _canonicalize_signs(u[:, ::-1][:, :rank])
     lam = jnp.maximum(lam, 1e-12)
     proj = (sw[:, None] * u) / jnp.sqrt(lam)[None, :] / jnp.sqrt(n)
     return lam, proj
@@ -278,20 +302,24 @@ def _fit_rskpca_sharded(c: Array, w: Array, n: Array, kernel: Kernel,
 
 def fit_rskpca_sharded(centers, weights, n: int, kernel: Kernel, rank: int,
                        mesh: Mesh, axis: str = "data",
-                       lobpcg_min_m: int | None = None):
+                       lobpcg_min_m: int | None = None,
+                       matfree: bool | None = None):
     """Sharded Algorithm 1 core: returns (eigvals (rank,), projector (m, r)).
 
     Centers are padded to a device multiple with zero-weight rows (harmless:
     they contribute zero rows/columns to K-tilde and zero projector rows)
     and the padding is stripped before returning.  ``lobpcg_min_m`` is a
     test hook to force the distributed-matvec eigensolve at small m.
+    ``matfree`` (None = the bytes-budget policy of kernels.ops.matfree_fit)
+    skips the sharded Gram assembly entirely and streams matvec row-tiles
+    through the fused Pallas kernel per device (DESIGN.md §6).
 
     On CPU, small-m eigensolves hop to the same LAPACK subset driver the
     single-device fit uses (rskpca._host_subset_eigh) — same solver on both
     paths is what makes the 1e-5 sharded-vs-single parity hold.
     """
     from repro.core.rskpca import (_LOBPCG_MIN_M, _fold_projector,
-                                   _host_subset_eigh)
+                                   _host_subset_eigh, _use_matfree)
 
     c = jnp.asarray(centers, jnp.float32)
     w = jnp.asarray(weights, jnp.float32)
@@ -300,7 +328,9 @@ def fit_rskpca_sharded(centers, weights, n: int, kernel: Kernel, rank: int,
     cp = _pad_rows(c, ndev)
     wp = _pad_rows(w, ndev)
     min_m = _LOBPCG_MIN_M if lobpcg_min_m is None else int(lobpcg_min_m)
-    if jax.default_backend() == "cpu" and cp.shape[0] <= min_m:
+    use_mf = _use_matfree(kernel, cp.shape[0], rank, matfree)
+    if (not use_mf and jax.default_backend() == "cpu"
+            and cp.shape[0] <= min_m):
         kt = np.asarray(_sharded_wgram_jit(cp, wp, kernel, mesh, axis)) \
             / np.float32(n)
         top = _host_subset_eigh(kt, rank)
@@ -308,5 +338,6 @@ def fit_rskpca_sharded(centers, weights, n: int, kernel: Kernel, rank: int,
             lam, proj = _fold_projector(*top, np.asarray(wp), n)
             return jnp.asarray(lam), jnp.asarray(proj[:m])
     lam, proj = _fit_rskpca_sharded(
-        cp, wp, jnp.float32(n), kernel, rank, mesh, axis, min_m)
+        cp, wp, jnp.float32(n), kernel, rank, mesh, axis, min_m,
+        matfree=use_mf)
     return lam, proj[:m]

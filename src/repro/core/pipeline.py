@@ -1,0 +1,77 @@
+"""Single-pass select->fit pipeline (DESIGN.md §6).
+
+``fit_shadow_fused`` runs blocked shadow selection (Algorithm 2, §3) and
+Algorithm 1's fit as one device-resident dataflow:
+
+  * selection runs to exhaustion inside ONE jitted while_loop
+    (``shadow._blocked_select_device`` with ``stop_count=0``) — the accepted
+    centers scatter straight into a preallocated (n, d) device buffer;
+  * the ONLY host synchronization between the stages is the scalar center
+    count m (needed to pick the power-of-two capacity bucket the fit
+    compiles against — the same bucketing contract as streaming/serving);
+  * the fit consumes a ``cap``-row slice of the selection output directly:
+    no host round-trip of the center data, no re-padding — rows beyond m
+    carry zero weight, which zeroes their K-tilde rows/columns and their
+    projector rows (the established zero-weight-padding invariant);
+  * the sliced center/weight buffers are donated into the jitted fit
+    (``_fit_rskpca_device``) and XLA reuses their storage (the model's
+    center rows are materialized to host BEFORE the donation, since a
+    cap == n slice is the selection buffer itself);
+  * above the matrix-free crossover (kernels.ops.matfree_fit) the fit's
+    eigensolve streams Gram tiles through the fused ``gram_matvec`` kernel —
+    the select->fit pipeline then never materializes ANY m x m buffer.
+
+Tradeoff vs ``shadow_select_blocked``: the host-compaction cascade (§3)
+halves late-round absorption work but pays a host sync + re-upload per
+phase; the fused loop keeps everything device-resident at full-n absorption
+cost per round.  At large n/m — exactly where the matrix-free fit engages —
+the removed host traffic wins; below it ``selector="blocked"`` remains the
+default.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_math import Kernel
+from repro.core import shadow as shadow_mod
+from repro.core.shadow import _pow2_ceil
+from repro.core.rskpca import KPCAModel, _fit_rskpca_device, _use_matfree
+
+
+def fit_shadow_fused(x, kernel: Kernel, rank: int, *, ell: float,
+                     block: int | None = None,
+                     matfree: bool | None = None) -> KPCAModel:
+    """ShDE selection + RSKPCA fit with the centers never leaving device.
+
+    Equivalent to ``fit(x, ..., method="shadow", selector="blocked")``
+    followed by ``fit_rskpca`` — same cover invariants, same operator — but
+    with the intermediate RSDE elided.  ``matfree=None`` consults the
+    bytes-budget crossover; the model is materialized to host only at the
+    very end (sliced to the true m).
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    n, d = xf.shape
+    eps2 = jnp.float32(kernel.epsilon(ell)) ** 2
+    b = max(1, min(256 if block is None else block, n))
+    _, centers, weights, _, m_dev = shadow_mod._blocked_select_device(
+        xf, eps2, b, jnp.ones((n,), bool), jnp.asarray(0, jnp.int32))
+    m = int(m_dev)  # the pipeline's single host sync: one scalar
+    rank = min(rank, m)
+    cap = min(n, _pow2_ceil(max(m, 128)))
+    # materialize the model's center rows BEFORE the fit: the cap slices are
+    # donated into it, and when cap == n jax's full-slice fast path returns
+    # `centers` ITSELF — reading it after donation would hit a deleted array
+    centers_host = np.asarray(centers[:m], np.float32)
+    c_cap = centers[:cap]
+    w_cap = weights[:cap]
+    use_mf = _use_matfree(kernel, cap, rank, matfree)
+    lam, proj = _fit_rskpca_device(c_cap, w_cap, jnp.float32(n), kernel,
+                                   rank, matfree=use_mf)
+    return KPCAModel(
+        kernel=kernel,
+        centers=centers_host,
+        projector=np.asarray(proj[:m]),
+        eigvals=np.asarray(lam),
+        method="rskpca+shadow-fused",
+    )

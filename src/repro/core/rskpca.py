@@ -128,14 +128,25 @@ def _canonicalize_signs(vec: Array) -> Array:
     return vec * jnp.where(s == 0, 1.0, s)[None, :]
 
 
+def _lobpcg_topk(operator, m: int, rank: int):
+    """Top-``rank`` eigenpairs (descending) of a PSD operator — a matrix or
+    a matvec callable — via LOBPCG, with the repo-standard deterministic
+    start and sign convention.  Every large-m eigensolve path (materialized,
+    matrix-free, sharded, streaming) shares THIS definition, so iteration
+    budget / seed / canonicalization can never drift between the paths the
+    parity tests compare."""
+    from jax.experimental.sparse.linalg import lobpcg_standard
+
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (m, rank), jnp.float32)
+    lam, vec, _ = lobpcg_standard(operator, x0, m=100)
+    return lam, _canonicalize_signs(vec)
+
+
 def _top_eigh(mat: Array, rank: int):
     """Top-``rank`` eigenpairs of a symmetric PSD matrix, descending."""
     m = mat.shape[0]
     if m > _LOBPCG_MIN_M and 5 * rank < m:
-        from jax.experimental.sparse.linalg import lobpcg_standard
-        x0 = jax.random.normal(jax.random.PRNGKey(0), (m, rank), mat.dtype)
-        lam, vec, _ = lobpcg_standard(mat, x0, m=100)
-        return lam, _canonicalize_signs(vec)  # already descending
+        return _lobpcg_topk(mat, m, rank)
     lam, vec = jnp.linalg.eigh(mat)  # ascending
     lam = lam[::-1][:rank]
     vec = vec[:, ::-1][:, :rank]
@@ -174,15 +185,33 @@ def _fold_projector(lam: np.ndarray, u: np.ndarray, w: np.ndarray, n: float):
     return lam, proj
 
 
-@partial(jax.jit, static_argnames=("kernel", "rank"))
+@partial(jax.jit, static_argnames=("kernel", "rank", "matfree"),
+         donate_argnums=(0, 1))
 def _fit_rskpca_device(c: Array, w: Array, n: Array, kernel: Kernel,
-                       rank: int):
+                       rank: int, matfree: bool = False):
     """Algorithm 1 on device, end-to-end under one jit: fused W K^C W
     (Pallas on the default backend), eigh, and the projector fold — nothing
-    round-trips to host between center selection and the projector."""
+    round-trips to host between center selection and the projector.
+
+    ``matfree=True`` (DESIGN.md §6) never materializes the m x m weighted
+    Gram: LOBPCG's matvec recomputes kernel tiles on-chip through the fused
+    ``gram_matvec`` Pallas kernel, so peak fit memory drops from O(m^2) to
+    O(m * block).  The center/weight buffers are donated — callers pass
+    freshly created device arrays (fit_rskpca converts from numpy; the fused
+    pipeline slices fresh buffers out of the selection output), and XLA
+    reuses their storage instead of copying.
+    """
     sw = jnp.sqrt(w)
-    k_tilde = weighted_gram(kernel, c, w) / n  # normalized (divide by n)
-    lam, u = _top_eigh(k_tilde, rank)
+    if matfree:
+        def matvec(v):
+            return kernel_ops.gram_matvec(
+                c, c, v, wx=w, wy=w, sigma=kernel.sigma, p=kernel.p,
+                precision=kernel.precision, allow_dense=False) / n
+
+        lam, u = _lobpcg_topk(matvec, c.shape[0], rank)
+    else:
+        k_tilde = weighted_gram(kernel, c, w) / n  # normalized (divide by n)
+        lam, u = _top_eigh(k_tilde, rank)
     lam = jnp.maximum(lam, 1e-12)
     # A = diag(sqrt(w)) U Lambda^{-1/2} / sqrt(n): z(x) = k(x,C) A has the same
     # scale as classical KPCA's z(x) = k(x,X) V Lambda_mat^{-1/2} (checked in
@@ -191,21 +220,59 @@ def _fit_rskpca_device(c: Array, w: Array, n: Array, kernel: Kernel,
     return lam, proj
 
 
+def _use_matfree(kernel: Kernel, m: int, rank: int,
+                 matfree: bool | None) -> bool:
+    """Matrix-free engage rule: explicit override, else the bytes-budget
+    crossover (kernels.ops.matfree_fit) — and only where LOBPCG is sound
+    (rank well below m) on the Pallas backend (the dense backend is the
+    materializing oracle by definition).  An explicit ``matfree=True`` that
+    LOBPCG cannot honor fails loudly HERE, not with a cryptic error deep in
+    the solver — and never silently materializes the Gram the caller asked
+    us not to build."""
+    if matfree:
+        if 5 * rank >= m:
+            raise ValueError(
+                f"matfree=True needs 5*rank < m for a sound LOBPCG solve "
+                f"(got rank={rank}, m={m}); drop the override below the "
+                "crossover — the materialized path is exact there")
+        return True
+    if matfree is not None:  # explicit False
+        return False
+    return (kernel.backend == "pallas" and 5 * rank < m
+            and kernel_ops.matfree_fit(m))
+
+
 def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int,
-               mesh=None, axis: str = "data") -> KPCAModel:
+               mesh=None, axis: str = "data",
+               matfree: bool | None = None) -> KPCAModel:
     """Algorithm 1: weighted m x m Gram, eigh, fold weights into projector.
 
     With ``mesh``, the m x m weighted Gram assembly is sharded over center
     ROWS (columns replicated) and the large-m eigensolve runs LOBPCG with a
     row-distributed matvec — only the (m, r) projector is ever replicated
     (DESIGN.md §5).  The result matches the single-device fit to fp noise.
+
+    Above the matrix-free crossover (``matfree=None`` consults the
+    bytes-budget policy in kernels.ops; True/False force it) the m x m Gram
+    is never materialized at all: LOBPCG's matvec streams kernel tiles
+    through the fused ``gram_matvec`` Pallas kernel (DESIGN.md §6).  Below
+    the crossover the materialized path runs unchanged, bit-identically.
     """
-    c = jnp.asarray(rsde.centers, jnp.float32)
-    w = jnp.asarray(rsde.weights, jnp.float32)
+    # materialize to host FIRST: the single-device fits donate (c, w), and
+    # building them from numpy guarantees fresh device buffers even when the
+    # caller's RSDE already holds jax arrays (jnp.asarray would alias them
+    # and donation would consume the caller's data)
+    centers_np = np.asarray(rsde.centers, np.float32)
+    c = jnp.asarray(centers_np)
+    w = jnp.asarray(np.asarray(rsde.weights, np.float32))
+    use_mf = _use_matfree(kernel, c.shape[0], rank, matfree)
     if mesh is not None:
         from repro.core import distributed as dist
         lam, proj = dist.fit_rskpca_sharded(c, w, rsde.n, kernel, rank,
-                                            mesh, axis=axis)
+                                            mesh, axis=axis, matfree=matfree)
+    elif use_mf:
+        lam, proj = _fit_rskpca_device(c, w, jnp.float32(rsde.n), kernel,
+                                       rank, matfree=True)
     elif (jax.default_backend() == "cpu" and c.shape[0] <= _LOBPCG_MIN_M):
         # CPU dispatch: fused Gram on device, then the LAPACK subset
         # eigensolve on host — 2x the end-to-end fit at m ~ 500 vs keeping
@@ -222,7 +289,7 @@ def fit_rskpca(rsde: RSDE, kernel: Kernel, rank: int,
                                        rank)
     return KPCAModel(
         kernel=kernel,
-        centers=np.asarray(rsde.centers, np.float32),
+        centers=centers_np,
         projector=np.asarray(proj),
         eigvals=np.asarray(lam),
         method=f"rskpca+{rsde.scheme}",
@@ -288,6 +355,15 @@ def fit(x, kernel: Kernel, rank: int, *, method: str = "shadow",
             return fit_kpca(x, kernel, rank)
         assert m is not None
         return fit_subsampled_kpca(x, kernel, rank, m, **kw)
+    if method == "shadow" and mesh is None and kw.get("selector") == "fused":
+        # single-pass select->fit: device-resident blocked selection streams
+        # its accepted centers straight into the (matrix-free above the
+        # crossover) fit operator — no host round-trip between the stages
+        # (DESIGN.md §6; core/pipeline.py)
+        assert ell is not None, "shadow RSDE is parameterized by ell"
+        from repro.core.pipeline import fit_shadow_fused
+        kw2 = {k: v for k, v in kw.items() if k != "selector"}
+        return fit_shadow_fused(x, kernel, rank, ell=ell, **kw2)
     if mesh is not None and method == "shadow":
         assert ell is not None, "shadow RSDE is parameterized by ell"
         from repro.core import distributed as dist

@@ -7,7 +7,7 @@ within-cluster spread small relative to the kernel bandwidth, so that the
 ShDE retains <~10-30% of the data for ell in [3, 5] exactly as in Fig. 6.
 
 Bandwidths are re-derived with the median-distance heuristic (the paper used
-cross-validation on the real data; DESIGN.md §11 records this changed
+cross-validation on the real data; DESIGN.md §12 records this changed
 assumption).  All claims validated against the paper are therefore the
 *relative* ones: speedup ratios, method orderings, convergence in ell.
 """

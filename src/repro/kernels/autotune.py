@@ -7,8 +7,10 @@ which tile shape actually wins on a given backend.  This module replaces the
 heuristic with a tiny measured tuner:
 
   * each op asks for a plan under a key ``(op, n-bucket, m-bucket, d,
-    precision, backend)`` — buckets are power-of-two ceilings so nearby
-    shapes share one measurement;
+    precision, backend, device-kind, jax-version)`` — buckets are
+    power-of-two ceilings so nearby shapes share one measurement, and the
+    device/runtime qualifier (plus a schema version on the disk envelope)
+    keeps a cache measured on one machine from being replayed on another;
   * the first request per key times every legal candidate (one warmup for
     compile, then best-of-``_REPS``) and records the winner;
   * winners are cached in-process and persisted to disk (JSON), so a process
@@ -33,6 +35,30 @@ from typing import Callable
 _LOCK = threading.RLock()
 _MEM: dict[str, dict] = {}     # key -> {"winner": name, "us": {name: micros}}
 _DISK_LOADED = False
+
+#: On-disk cache format version.  Bumping it orphans every older cache file
+#: (schema 1 was a bare key->plan dict with no environment qualifier, so a
+#: plan measured on one device kind / jax version could be replayed on
+#: another — exactly the staleness this versioned envelope prevents).
+_SCHEMA = 2
+
+_ENV_TAG = None
+
+
+def env_tag() -> str:
+    """Hardware + software qualifier appended to every plan key: a plan is
+    only ever replayed on the device kind and jax version that measured it."""
+    global _ENV_TAG
+    if _ENV_TAG is None:
+        import jax
+        kind = jax.devices()[0].device_kind.replace(" ", "_").replace("|", "_")
+        _ENV_TAG = f"{kind}|jax{jax.__version__}"
+    return _ENV_TAG
+
+
+def qualified(key: str) -> str:
+    """The full cache key ``best`` stores measurements under."""
+    return f"{key}|{env_tag()}"
 
 #: Dense fallback is only a candidate (and the heuristic only picks it) below
 #: this many output cells — beyond it the dense path's n x m intermediates
@@ -91,7 +117,9 @@ def _load_disk() -> None:
     try:
         with open(_cache_path()) as f:
             disk = json.load(f)
-        for k, v in disk.items():
+        if not isinstance(disk, dict) or disk.get("schema") != _SCHEMA:
+            return  # pre-versioned or foreign cache: invalidate wholesale
+        for k, v in disk.get("plans", {}).items():
             _MEM.setdefault(k, v)
     except (OSError, ValueError):
         pass
@@ -103,18 +131,22 @@ def _save_disk() -> None:
     path = _cache_path()
     try:
         # merge with whatever is on disk (a concurrent process may have
-        # persisted other keys since we loaded) — our measurements win ties
+        # persisted other keys since we loaded) — our measurements win ties;
+        # an old-schema file is dropped, not merged
         merged: dict[str, dict] = {}
         try:
             with open(path) as f:
-                merged.update(json.load(f))
+                disk = json.load(f)
+            if isinstance(disk, dict) and disk.get("schema") == _SCHEMA:
+                merged.update(disk.get("plans", {}))
         except (OSError, ValueError):
             pass
         merged.update(_MEM)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + f".tmp{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump(merged, f, indent=1, sort_keys=True)
+            json.dump({"schema": _SCHEMA, "plans": merged}, f, indent=1,
+                      sort_keys=True)
         os.replace(tmp, path)
     except OSError:
         pass  # read-only FS: in-process cache still works
@@ -136,9 +168,14 @@ def best(key: str, candidates: dict[str, Callable[[], object]],
     synthetic data (the thunk must block until the result is ready).  A thunk
     that raises is disqualified.  With a single candidate, or measurement
     disabled, no timing happens.
+
+    Keys are qualified with the device kind and jax version (``env_tag``)
+    before lookup/storage, so a persisted plan can never be replayed on
+    hardware or a runtime that did not measure it.
     """
     if not measurement_enabled():
         return default
+    key = qualified(key)
     with _LOCK:
         _load_disk()
         hit = _MEM.get(key)

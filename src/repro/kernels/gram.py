@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -161,6 +162,119 @@ def gram_row_pallas(x: Array, centers: Array, *, sigma: float, p: int = 2,
         ],
         interpret=interpret,
     )(x, centers, w)
+
+
+def _gram_matvec_kernel(x_ref, y_ref, wx_ref, wy_ref, v_ref, o_ref, d2_ref, *,
+                        sigma: float, p: int, weighted: bool, k_steps: int):
+    """Grid step (i, j, k): matrix-free K_w @ V, flash-attention style.
+
+    For output row-tile i, column-tile j accumulates the partial squared
+    distance over feature chunk k into the VMEM scratch ``d2_ref`` (the
+    (bn, bm) Gram tile lives ONLY there — it is never written to HBM).  On
+    the last feature chunk the kernel nonlinearity and the RSKPCA sqrt(w)
+    weighting are applied in-register and the tile is immediately contracted
+    against V's j-tile on the MXU, accumulating into the (bn, r) output
+    tile.  f32 accumulation throughout; bf16 operands only feed the matmuls.
+    """
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    x = x_ref[...]                      # (bn, bk) f32 or bf16
+    y = y_ref[...]                      # (bm, bk)
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    xx = jnp.sum(xf * xf, axis=-1, keepdims=True)        # (bn, 1)
+    yy = jnp.sum(yf * yf, axis=-1, keepdims=True).T      # (1, bm)
+    cross = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (bn, bm) on the MXU
+    partial = xx + yy - 2.0 * cross
+
+    @pl.when(k == 0)
+    def _init():
+        d2_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _accum():
+        d2_ref[...] = d2_ref[...] + partial
+
+    @pl.when(k == k_steps - 1)
+    def _contract():
+        d2 = jnp.maximum(d2_ref[...], 0.0)
+        if p == 2:
+            s = d2 / (sigma * sigma)
+        elif p == 1:
+            s = jnp.sqrt(d2) / sigma
+        else:
+            s = d2 ** (p / 2.0) / sigma**p
+        g = jnp.exp(-s)
+        if weighted:
+            g = g * jnp.sqrt(wx_ref[...].astype(jnp.float32))[:, None]
+            g = g * jnp.sqrt(wy_ref[...].astype(jnp.float32))[None, :]
+        v = v_ref[...]                                   # (bm, r)
+        pv = jax.lax.dot_general(
+            g.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (bn, r) on the MXU
+
+        @pl.when(j == 0)
+        def _first():
+            o_ref[...] = pv.astype(o_ref.dtype)
+
+        @pl.when(j > 0)
+        def _rest():
+            o_ref[...] = (o_ref[...].astype(jnp.float32) + pv
+                          ).astype(o_ref.dtype)
+
+
+def gram_matvec_pallas(x: Array, y: Array, v: Array, *, sigma: float,
+                       p: int = 2, wx: Array | None = None,
+                       wy: Array | None = None, block_n: int = 256,
+                       block_m: int = 256, block_k: int | None = None,
+                       interpret: bool = False) -> Array:
+    """out = K_w @ v without materializing K_w: out[i] = sum_j sqrt(wx_i)
+    phi(||x_i-y_j||^p/sigma^p) sqrt(wy_j) v[j].
+
+    Peak memory is O(n*r + tiles), never O(n*m) — the Gram tile exists only
+    in the (block_n, block_m) VMEM scratch.  Shapes must be pre-padded:
+    n % block_n == 0, m % block_m == 0, d % block_k == 0, and v's row count
+    equal to m with zero rows on any padded tail (``ops.gram_matvec``
+    handles all padding; zero v-rows make unweighted padding exact, and
+    zero-weight padding already kills padded columns on the weighted path).
+    """
+    n, d = x.shape
+    m, d2_ = y.shape
+    assert d == d2_, (x.shape, y.shape)
+    assert v.shape[0] == m, (v.shape, m)
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    block_k = block_k or d
+    assert d % block_k == 0, (d, block_k)
+    k_steps = d // block_k
+    r = v.shape[1]
+    weighted = wx is not None
+    if wx is None:
+        wx = jnp.ones((n,), jnp.float32)
+    if wy is None:
+        wy = jnp.ones((m,), jnp.float32)
+
+    grid = (n // block_n, m // block_m, k_steps)
+    kernel = functools.partial(_gram_matvec_kernel, sigma=float(sigma),
+                               p=int(p), weighted=weighted, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_n,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_m,), lambda i, j, k: (j,)),
+            pl.BlockSpec((block_m, r), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, r), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n, block_m), jnp.float32)],
+        interpret=interpret,
+    )(x, y, wx, wy, v)
 
 
 def gram_pallas(x: Array, y: Array, *, sigma: float, p: int = 2,

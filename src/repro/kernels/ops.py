@@ -19,11 +19,22 @@ autotuner would pick.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import autotune
+
+# NOTE on donation: the donated fit/transform entry points mark their
+# scratch operands dead for the caller; XLA only ALIASES a donated buffer
+# into an output of matching shape and emits a trace-time UserWarning
+# otherwise.  Off-alias donation is the expected steady state here
+# (projector outputs rarely match center-buffer shapes), and the warning is
+# deliberately NOT suppressed: a global filter would swallow user code's own
+# donation diagnostics and a per-call catch_warnings races across serving
+# threads.  Python's default dedup shows it once per compiled shape;
+# aliasing success is asserted where it matters, in tests/test_matfree.py.
 from repro.kernels import gram as _gram
 from repro.kernels import shadow_assign as _assign
 from repro.kernels import kpca_project as _project
@@ -121,6 +132,19 @@ def _gram_dense(x, y, wx, wy, *, sigma, p, weighted, precision):
     return g
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "p", "weighted", "precision"))
+def _gram_matvec_dense(x, y, wx, wy, v, *, sigma, p, weighted, precision):
+    """Below-crossover fallback: materialize the (small) Gram, then matmul."""
+    g = _gram_dense(x, y, wx, wy, sigma=sigma, p=p, weighted=weighted,
+                    precision=precision)
+    cd = _compute_dtype(precision)
+    return jax.lax.dot_general(
+        g.astype(cd), v.astype(cd), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=())
 def _assign_dense(x, c, valid):
     d2 = _dense_sq_dists(x, c, "f32")  # assignment always resolves in f32
@@ -179,6 +203,46 @@ def _gram_plan(n: int, m: int, d: int, precision: str, interpret: bool):
     if interpret:
         cands["pallas_fat"] = run("pallas_fat")
     if nb * mb <= autotune.DENSE_MAX_CELLS:
+        cands["dense"] = run("dense")
+    winner = autotune.best(key, cands, default="pallas")
+    if winner == "dense":
+        return "dense", None
+    blocks = _fat_gram_blocks(d) if winner == "pallas_fat" \
+        else pick_gram_blocks(d)
+    return "pallas", blocks
+
+
+def _matvec_plan(n: int, m: int, d: int, r: int, precision: str,
+                 interpret: bool, allow_dense: bool = True):
+    """Returns ("dense", None) or ("pallas", (bn, bm, bk)) for gram_matvec.
+
+    ``allow_dense=False`` keeps the dense (Gram-materializing) fallback out
+    of the candidate set entirely — the matrix-free fit's memory guarantee
+    must hold even where dense would win on wall-clock, so it tunes only
+    over the streaming tile shapes (under its own cache key).
+    """
+    nb, mb = autotune.bucket(n), autotune.bucket(m)
+    db = autotune.bucket(d, lo=8, hi=8192)
+    rb = autotune.bucket(r, lo=8, hi=512)
+    if not autotune.measurement_enabled():
+        kind = autotune.heuristic_plan(n, m, interpret)
+        return ((kind, None) if kind == "dense" and allow_dense
+                else ("pallas", pick_gram_blocks(d)))
+    mode = "interp" if interpret else "tpu"
+    key = f"gmv|n{nb}|m{mb}|d{db}|r{rb}|{precision}|{mode}" \
+        + ("" if allow_dense else "|nd")
+    x, y = _bench_rows(nb, db), _bench_rows(mb, db)
+    v = _bench_rows(min(mb, _MEASURE_MAX_ROWS), rb)
+
+    def run(plan):
+        return lambda: jax.block_until_ready(gram_matvec(
+            x, y, v, sigma=1.0, p=2, interpret=interpret,
+            precision=precision, plan=plan))
+
+    cands = {"pallas": run("pallas")}
+    if interpret:
+        cands["pallas_fat"] = run("pallas_fat")
+    if allow_dense and nb * mb <= autotune.DENSE_MAX_CELLS:
         cands["dense"] = run("dense")
     winner = autotune.best(key, cands, default="pallas")
     if winner == "dense":
@@ -302,6 +366,123 @@ def weighted_gram(centers, weights, *, sigma: float, p: int = 2,
     """Algorithm 1's K-tilde = W K^C W in one fused pass."""
     return gram(centers, centers, sigma=sigma, p=p, wx=weights, wy=weights,
                 interpret=interpret, precision=precision, plan=plan)
+
+
+# --------------------------------------------------------------------------
+# gram_matvec (matrix-free fit operator)
+# --------------------------------------------------------------------------
+
+
+#: The materialized-Gram fit path is abandoned once the f32 m x m buffer
+#: would exceed this many bytes (override with REPRO_GRAM_BYTES_BUDGET);
+#: beyond it the LOBPCG matvec recomputes Gram tiles on-chip instead
+#: (DESIGN.md §6).  128 MB puts the crossover at m_pad ~ 5793, so every
+#: m <= 4096 fit stays bit-identical to the materialized path.
+DEFAULT_GRAM_BYTES_BUDGET = 128 * 1024 * 1024
+
+
+def gram_bytes_budget() -> int:
+    env = os.environ.get("REPRO_GRAM_BYTES_BUDGET")
+    return int(env) if env else DEFAULT_GRAM_BYTES_BUDGET
+
+
+def matfree_fit(m: int) -> bool:
+    """Crossover policy for the fit eigensolve: go matrix-free (LOBPCG
+    through ``gram_matvec``) once materializing the m x m weighted Gram
+    would blow the bytes budget.  ``REPRO_MATFREE_MIN_M`` forces an explicit
+    threshold (tests use it to exercise the matfree path at small m)."""
+    env = os.environ.get("REPRO_MATFREE_MIN_M")
+    if env:
+        return m >= int(env)
+    return 4 * m * m > gram_bytes_budget()
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "interpret",
+                                             "bn", "bm", "bk"))
+def _gram_matvec_call(xp, yp, wxp, wyp, vp, *, sigma, p, interpret, bn, bm,
+                      bk):
+    return _gram.gram_matvec_pallas(xp, yp, vp, sigma=sigma, p=p, wx=wxp,
+                                    wy=wyp, block_n=bn, block_m=bm,
+                                    block_k=bk, interpret=interpret)
+
+
+def gram_matvec(x, y, v, *, sigma: float, p: int = 2, wx=None, wy=None,
+                interpret: bool | None = None, precision: str = "f32",
+                plan: str | None = None, allow_dense: bool = True) -> Array:
+    """Matrix-free (weighted) Gram matvec: K_w @ v with K_w never leaving
+    VMEM — peak memory O(n*r + m*r + tiles) instead of O(n*m).
+
+    This is the fit-side operator of the matrix-free eigensolve (DESIGN.md
+    §6): LOBPCG calls it once per sweep with v = the current (m, r) search
+    block.  ``plan=None`` consults the autotuner (tuned Pallas tiles, fatter
+    interpret-mode tiles, or — below the crossover — a dense fallback that
+    materializes the small Gram); ``precision="bf16"`` feeds bf16 operands
+    to BOTH fused matmuls (distance cross term and the tile-V contraction)
+    with f32 accumulation.  ``allow_dense=False`` (the matrix-free fit)
+    bars the materializing fallback no matter what the autotuner measures —
+    the O(n*m)-free memory guarantee is part of the contract there.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    n, m, r = x.shape[0], y.shape[0], v.shape[1]
+    assert v.shape[0] == m, (v.shape, y.shape)
+    blocks = None
+    if plan is None:
+        plan, blocks = _matvec_plan(n, m, x.shape[1], r, precision,
+                                    interpret, allow_dense=allow_dense)
+    assert allow_dense or plan != "dense", \
+        "dense plan forced where the matrix-free contract forbids it"
+    ones_n = jnp.ones((n,), jnp.float32)
+    ones_m = jnp.ones((m,), jnp.float32)
+    weighted = wx is not None or wy is not None
+    wxj = jnp.asarray(wx, jnp.float32) if wx is not None else ones_n
+    wyj = jnp.asarray(wy, jnp.float32) if wy is not None else ones_m
+    if plan == "dense":
+        return _gram_matvec_dense(x, y, wxj, wyj, v, sigma=float(sigma),
+                                  p=int(p), weighted=weighted,
+                                  precision=precision)
+    if blocks is None:
+        blocks = _fat_gram_blocks(x.shape[1]) if plan == "pallas_fat" \
+            else pick_gram_blocks(x.shape[1])
+    bn, bm, bk = blocks
+    bn = min(bn, _round_up(n, 128))
+    bm = min(bm, _round_up(m, 128))
+    bk = min(bk, _round_up(x.shape[1], 128))
+    dpad = _round_up(x.shape[1], bk) - x.shape[1]
+    if dpad:
+        x = jnp.pad(x, ((0, 0), (0, dpad)))
+        y = jnp.pad(y, ((0, 0), (0, dpad)))
+    cd = _compute_dtype(precision)
+    xp = _pad_rows(x, bn).astype(cd)
+    yp = _pad_rows(y, bm).astype(cd)
+    # weights pad with ZEROS (sqrt(0) kills padded columns on the weighted
+    # path); v pads with zero rows so padded columns of the UNWEIGHTED
+    # kernel — k(x, 0-pad) != 0 — contribute exactly nothing either way
+    wxp = _pad_rows(wxj, bn) if weighted else jnp.ones((xp.shape[0],),
+                                                       jnp.float32)
+    wyp = _pad_rows(wyj, bm) if weighted else jnp.ones((yp.shape[0],),
+                                                       jnp.float32)
+    rp = _round_up(r, 128)
+    vp = _pad_rows(v, bm).astype(cd)
+    vp = jnp.pad(vp, ((0, 0), (0, rp - r)))
+    out = _gram_matvec_call(xp, yp, wxp, wyp, vp, sigma=float(sigma),
+                            p=int(p), interpret=bool(interpret), bn=bn,
+                            bm=bm, bk=bk)
+    return out[:n, :r]
+
+
+def weighted_gram_matvec(centers, weights, v, *, sigma: float, p: int = 2,
+                         interpret: bool | None = None,
+                         precision: str = "f32",
+                         plan: str | None = None,
+                         allow_dense: bool = True) -> Array:
+    """Algorithm 1's K-tilde @ v without ever materializing K-tilde."""
+    return gram_matvec(centers, centers, v, sigma=sigma, p=p, wx=weights,
+                       wy=weights, interpret=interpret, precision=precision,
+                       plan=plan, allow_dense=allow_dense)
 
 
 # --------------------------------------------------------------------------
@@ -442,8 +623,12 @@ def shadow_assign(x, centers, m_valid: int | None = None, *, valid=None,
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("sigma", "p", "bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "bn", "interpret"),
+                   donate_argnums=(0,))
 def _project_call(xp, cp, ap, *, sigma, p, bn, interpret):
+    # xp (the padded query chunk) is donated: it is a serving-loop temporary
+    # (kpca_project guarantees ownership before calling), so XLA reuses its
+    # storage instead of holding chunk x d alive across the kernel
     return _project.kpca_project_pallas(xp, cp, ap, sigma=sigma, p=p,
                                         block_n=bn, interpret=interpret)
 
@@ -487,23 +672,30 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     rp = _round_up(r, 128)
     ap = jnp.pad(ap, ((0, 0), (0, rp - r)))
 
-    def run(xs):
+    def run(xs, owned):
         if plan == "dense":
             return _project_dense(xs, centers, projector,
                                   sigma=float(sigma), p=int(p),
                                   precision=precision)
         bn = min(512, _round_up(xs.shape[0], 128))
         xsp = _pad_rows(xs, bn).astype(cd)
+        if xsp is xs and not owned:
+            # nothing was padded or cast, so xsp still IS the caller's
+            # buffer; _project_call donates its first argument, and donating
+            # memory we do not own would consume it out from under the
+            # caller — copy first (the owned chunked slices skip this)
+            xsp = jnp.array(xsp, copy=True)
         out = _project_call(xsp, cp, ap, sigma=float(sigma), p=int(p),
                             bn=bn, interpret=bool(interpret))
         return out[: xs.shape[0], :r]
 
     if chunk is None or n <= chunk:
-        return run(x)
+        return run(x, owned=False)
     chunk = _round_up(chunk, 128)
     # fixed-shape streaming: pad the row count to a chunk multiple so EVERY
-    # slice (the ragged tail included) traces with one shape
+    # slice (the ragged tail included) traces with one shape; each slice is
+    # a fresh buffer this function owns, so donation needs no copy
     xpad = _pad_rows(x, chunk)
-    pieces = [run(xpad[s : s + chunk])
+    pieces = [run(xpad[s : s + chunk], owned=True)  # slices are fresh buffers
               for s in range(0, xpad.shape[0], chunk)]
     return jnp.concatenate(pieces, axis=0)[:n]

@@ -35,7 +35,7 @@ SHAPES = {
 
 
 def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
-    """The DESIGN.md §7 skip policy."""
+    """The DESIGN.md §8 skip policy."""
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, "pure full-attention arch — long_500k needs sub-quadratic"
     return True, ""

@@ -1,4 +1,4 @@
-# Streaming RSKPCA (DESIGN.md §6): maintain a fitted reduced-set operator
+# Streaming RSKPCA (DESIGN.md §7): maintain a fitted reduced-set operator
 # online — insert/remove/replace centers as rank-one perturbations, patch the
 # eigensystem under a tracked Theorem-5.x error budget, detect drift, and
 # hot-swap the serving projector without retracing.

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.streaming import updates
-from repro.streaming.state import StreamingRSKPCA, _pow2_ceil, _solve
+from repro.streaming.state import StreamingRSKPCA, _pow2_ceil, solve_jit
 
 
 def needs_compaction(state: StreamingRSKPCA, max_fill: float = 0.9) -> bool:
@@ -52,8 +52,7 @@ def compact(state: StreamingRSKPCA, cap: int | None = None) -> StreamingRSKPCA:
     centers = jnp.asarray(centers)
     weights = jnp.asarray(weights)
     kgram = jnp.asarray(kgram)
-    lam, u = jax.jit(_solve, static_argnames="rank1")(
-        kgram, weights, state.n, rank1=state.rank + 1)
+    lam, u = solve_jit(kgram, weights, state.n, rank1=state.rank + 1)
     return dataclasses.replace(
         state, centers=centers, weights=weights, kgram=kgram,
         eigvals=lam, u=u, err_est=jnp.float32(0.0),

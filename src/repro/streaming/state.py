@@ -1,4 +1,4 @@
-"""The streaming RSKPCA state: a checkpointable pytree (DESIGN.md §6).
+"""The streaming RSKPCA state: a checkpointable pytree (DESIGN.md §7).
 
 ``StreamingRSKPCA`` holds everything needed to evolve a fitted reduced-set
 operator in place as the stream drifts:
@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core.kernels_math import Kernel, gram_matrix
 from repro.core.rsde import RSDE
-from repro.core.rskpca import KPCAModel, _canonicalize_signs, _top_eigh
+from repro.core.rskpca import (KPCAModel, _LOBPCG_MIN_M,
+                               _canonicalize_signs, _lobpcg_topk, _top_eigh)
 from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
@@ -45,8 +46,7 @@ Array = jax.Array
 DEFAULT_BUDGET = 0.05
 
 
-def _pow2_ceil(v: int) -> int:
-    return 1 << max(int(v) - 1, 0).bit_length()
+from repro.core.shadow import _pow2_ceil  # single bucketing rule repo-wide
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,13 +150,33 @@ def _unflatten(aux, leaves) -> StreamingRSKPCA:
 jax.tree_util.register_pytree_node(StreamingRSKPCA, _flatten, _unflatten)
 
 
-def _solve(kgram: Array, weights: Array, n: Array, rank1: int):
+def _solve(kgram: Array, weights: Array, n: Array, rank1: int,
+           min_m: int | None = None):
     """Exact top-(rank+1) eigensystem of K-tilde/n (jittable; LOBPCG above
-    the same crossover as the batch fit)."""
+    the same crossover as the batch fit).
+
+    Above the crossover the cached unweighted ``kgram`` is used DIRECTLY as
+    the LOBPCG operator — sqrt(w) folds into the matvec — so the budget
+    re-solve never materializes a second cap x cap weighted copy on top of
+    the cache (DESIGN.md §6's operator-reuse rule applied to streaming).
+    """
     sw = jnp.sqrt(weights)
+    cap = kgram.shape[0]
+    min_m = _LOBPCG_MIN_M if min_m is None else int(min_m)
+    if cap > min_m and 5 * rank1 < cap:
+        def matvec(v):
+            return sw[:, None] * (kgram @ (sw[:, None] * v)) / n
+
+        return _lobpcg_topk(matvec, cap, rank1)
     kt = sw[:, None] * kgram * sw[None, :] / n
     lam, u = _top_eigh(kt, rank1)
     return lam, _canonicalize_signs(u)
+
+
+#: Module-level jitted _solve: a fresh ``jax.jit(_solve)`` per call would
+#: carry its own compilation cache and re-trace the cap x cap eigensolve
+#: every time (from_rsde, ingest compaction, drift refresh all hit this).
+solve_jit = jax.jit(_solve, static_argnames=("rank1", "min_m"))
 
 
 def from_rsde(rsde: RSDE, kernel: Kernel, rank: int, *,
@@ -185,8 +205,7 @@ def from_rsde(rsde: RSDE, kernel: Kernel, rank: int, *,
     weights = jnp.asarray(weights)
     kgram = gram_matrix(kernel, centers, centers)
     n = jnp.asarray(float(rsde.n), jnp.float32)
-    lam, u = jax.jit(_solve, static_argnames="rank1")(
-        kgram, weights, n, rank1=rank + 1)
+    lam, u = solve_jit(kgram, weights, n, rank1=rank + 1)
     return StreamingRSKPCA(
         centers=centers, weights=weights, kgram=kgram, n=n,
         eigvals=lam, u=u,

@@ -1,4 +1,4 @@
-"""Online insert/remove/replace of reduced-set centers (DESIGN.md §6).
+"""Online insert/remove/replace of reduced-set centers (DESIGN.md §7).
 
 Every update is a RANK-ONE perturbation of the weighted Gram operator:
 

@@ -53,7 +53,8 @@ def test_best_persists_to_disk_and_reloads(fresh_cache):
                          "slow": lambda: __import__("time").sleep(0.01)},
                   default="slow")
     disk = json.load(open(fresh_cache))
-    assert disk["k2"]["winner"] == "fast"
+    assert disk["schema"] == autotune._SCHEMA
+    assert disk["plans"][autotune.qualified("k2")]["winner"] == "fast"
     # a fresh process (cleared memory) must reload the winner WITHOUT
     # measuring: candidates that raise would disqualify themselves
     autotune.clear(in_memory_only=False)
@@ -63,6 +64,35 @@ def test_best_persists_to_disk_and_reloads(fresh_cache):
 
     assert autotune.best("k2", {"fast": boom, "slow": boom},
                          default="slow") == "fast"
+
+
+def test_keys_qualified_by_device_and_jax_version(fresh_cache):
+    """Persisted plans must carry the device kind AND jax version, so a
+    cache file copied across machines/upgrades can never be replayed."""
+    import jax
+
+    autotune.best("kq", {"a": lambda: None,
+                         "b": lambda: __import__("time").sleep(0.005)},
+                  default="b")
+    (key,) = json.load(open(fresh_cache))["plans"].keys()
+    assert jax.devices()[0].device_kind.replace(" ", "_") in key
+    assert f"jax{jax.__version__}" in key
+
+
+def test_old_schema_cache_invalidated(fresh_cache):
+    """A pre-versioned (schema-1 flat dict) cache file must be ignored on
+    load and overwritten on save — stale plans never replay."""
+    stale_key = autotune.qualified("kold")
+    with open(fresh_cache, "w") as f:
+        json.dump({stale_key: {"winner": "slow"}}, f)  # schema-1 layout
+    autotune.clear(in_memory_only=False)
+    assert autotune.best("kold", {"fast": lambda: None,
+                                  "slow": lambda: __import__("time")
+                                  .sleep(0.01)},
+                         default="slow") == "fast"  # re-measured, not replayed
+    disk = json.load(open(fresh_cache))
+    assert disk["schema"] == autotune._SCHEMA
+    assert disk["plans"][stale_key]["winner"] == "fast"
 
 
 def test_single_candidate_skips_measurement(fresh_cache):
@@ -103,7 +133,7 @@ def test_autotuned_gram_matches_ref(fresh_cache):
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
     # and the measurement was recorded under a gram| key
     disk = json.load(open(fresh_cache))
-    assert any(k.startswith("gram|") for k in disk)
+    assert any(k.startswith("gram|") for k in disk["plans"])
 
 
 def test_disk_cache_defaults_off_under_pytest(monkeypatch):
@@ -121,10 +151,11 @@ def test_disk_cache_defaults_off_under_pytest(monkeypatch):
               "b": lambda: __import__("time").sleep(0.005)},
         default="b") == "a"
     # memory has it, the repo-root disk file does not
-    assert autotune._MEM[key]["winner"] == "a"
+    assert autotune._MEM[autotune.qualified(key)]["winner"] == "a"
     try:
         with open(autotune._cache_path()) as f:
-            assert key not in json.load(f)
+            disk = json.load(f)
+        assert autotune.qualified(key) not in disk.get("plans", disk)
     except OSError:
         pass  # no cache file at all: equally hermetic
     autotune.clear(in_memory_only=False)

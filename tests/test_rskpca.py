@@ -102,13 +102,13 @@ def test_backend_switch_parity(data):
 
 
 def test_selector_variants_fit_equivalently(data):
-    """blocked / sequential / streaming selectors all produce usable RSKPCA
-    models with comparable embedding quality."""
+    """blocked / sequential / streaming / fused selectors all produce usable
+    RSKPCA models with comparable embedding quality."""
     x, _, sigma = data
     ker = gaussian(sigma)
     ref = fit_kpca(x, ker, rank=4).transform(x[:100])
     errs = {}
-    for sel in ("blocked", "sequential", "streaming"):
+    for sel in ("blocked", "sequential", "streaming", "fused"):
         mdl = fit(x, ker, 4, method="shadow", ell=6.0, selector=sel)
         errs[sel] = embedding_alignment_error(ref, mdl.transform(x[:100]))
     scale = np.linalg.norm(ref)

@@ -1,4 +1,4 @@
-"""Streaming RSKPCA (DESIGN.md §6): online insert/remove/replace vs
+"""Streaming RSKPCA (DESIGN.md §7): online insert/remove/replace vs
 from-scratch refits, the tracked Theorem-5.x error budget, recompile-free
 hot swap, drift-triggered refresh, and checkpoint roundtrip."""
 import numpy as np
