@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: test bench bench-smoke bench-shard bench-stream
+.PHONY: test bench bench-smoke bench-shard bench-stream bench-serve
 
 # the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
@@ -29,3 +29,11 @@ bench-shard:
 # and fails if any update_speedup < 1.0
 bench-stream:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --stream
+
+# serving latency: Poisson open-loop p50/p99 of continuous batching vs
+# request-at-a-time over the same hot-swap server, plus per-precision-tier
+# transform throughput (f32/bf16/int8/fp8).  Appends mode=serve and
+# mode=serve_tier_* rows to BENCH_rskpca.json; fails if batching loses on
+# p99 at 2x saturation or a gated quantized tier is slower than bf16
+bench-serve:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --serve

@@ -1,7 +1,16 @@
-"""Aggregate dry-run JSONs into the roofline table (EXPERIMENTS.md §Roofline).
+"""Roofline tables: dry-run aggregation + the MEASURED transform crossover.
 
-Reads experiments/dryrun/*.json (written by repro.launch.dryrun), emits both
-the run.py CSV rows and a markdown table to experiments/roofline.md.
+Two sources feed experiments/roofline.md:
+
+  * the original dry-run aggregation — experiments/dryrun/*.json (written by
+    repro.launch.dryrun) rendered as the launch-shape roofline table;
+  * ``transform_sweep`` — a live sweep that drives the serving projection's
+    roofline-driven autotuner (``kernels.ops._project_plan`` ->
+    ``autotune.best_roofline``) across query/center shapes and precision
+    tiers, then reads back the measured peaks, ridge points, and
+    per-candidate predictions the tuner recorded in the schema-2 plan cache.
+    This is the measured bytes/FLOPs crossover behind every tile the serving
+    path picks — not a model, a recording of what the tuner saw.
 """
 from __future__ import annotations
 
@@ -43,29 +52,105 @@ def row(r: dict) -> str:
             f"| {args_gb:.2f} | {temp_gb:.2f} | {note} |")
 
 
+TRANSFORM_HEADER = ("| n | m | d | r | precision | winner | peak GFLOP/s | "
+                    "peak GB/s | ridge F/B | measured us | predicted us |")
+TRANSFORM_SEP = "|" + "---|" * 11
+
+#: (n, m, d, r) transform shapes swept; fast mode keeps the first two.
+TRANSFORM_SHAPES = ((2048, 512, 64, 16), (8192, 1024, 64, 16),
+                    (8192, 2048, 128, 32))
+TRANSFORM_PRECISIONS = ("f32", "bf16", "int8", "fp8")
+
+
+def transform_sweep(fast: bool = True, precisions=TRANSFORM_PRECISIONS):
+    """Tune the projection plan per (shape, precision) and return the table
+    rows the tuner recorded: measured fleet peaks + roofline predictions.
+
+    Needs measurement on (``REPRO_AUTOTUNE`` unset/1); a disabled tuner
+    yields no rows.  Already-cached keys replay from the plan cache, so a
+    repeated sweep is free — point ``REPRO_AUTOTUNE_CACHE`` somewhere fresh
+    to force re-measurement.
+    """
+    from repro.kernels import autotune
+    from repro.kernels import ops as kernel_ops
+
+    if not autotune.measurement_enabled():
+        return []
+    interpret = not kernel_ops._on_tpu()
+    mode = "interp" if interpret else "tpu"
+    shapes = TRANSFORM_SHAPES[:2] if fast else TRANSFORM_SHAPES
+    rows = []
+    for (n, m, d, r) in shapes:
+        for prec in precisions:
+            plan = kernel_ops._project_plan(n, m, d, r, prec, interpret)
+            nb, mb = autotune.bucket(n), autotune.bucket(m)
+            db = autotune.bucket(d, lo=8, hi=8192)
+            rb = autotune.bucket(r, lo=8, hi=512)
+            key = f"project|n{nb}|m{mb}|d{db}|r{rb}|{prec}|{mode}"
+            entry = autotune.roofline_entry(key)
+            rows.append({"n": n, "m": m, "d": d, "r": r, "precision": prec,
+                         "winner": plan, "roofline": entry})
+    return rows
+
+
+def transform_row(t: dict) -> str:
+    entry = t["roofline"]
+    if entry is None:  # single-candidate key or measurement failure
+        return (f"| {t['n']} | {t['m']} | {t['d']} | {t['r']} "
+                f"| {t['precision']} | {t['winner']} | — | — | — | — | — |")
+    rf = entry["roofline"]
+    meas = entry.get("us", {})
+    w = t["winner"]
+    return (f"| {t['n']} | {t['m']} | {t['d']} | {t['r']} | {t['precision']} "
+            f"| {w} | {rf['peak_gflops']} | {rf['peak_gbs']} "
+            f"| {rf['ridge_flop_per_byte']} "
+            f"| {meas.get(w, '—')} | {rf['pred_us'].get(w, '—')} |")
+
+
 def main(fast: bool = True, out_dir: str = "experiments/dryrun",
-         md_path: str = "experiments/roofline.md"):
+         md_path: str = "experiments/roofline.md",
+         sweep_transform: bool = True):
     recs = load_records(out_dir)
+    lines = []
     if not recs:
         emit("roofline_no_records", 0.0, hint="run repro.launch.dryrun --all")
+    else:
+        lines += [HEADER, SEP]
+        for r in recs:
+            lines.append(row(r))
+            if r["status"] == "ok":
+                rf = r["roofline"]
+                emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+                     f"{'' if r.get('variant', 'baseline') == 'baseline' else '_opt'}",
+                     rf["roofline_step_s"] * 1e6,
+                     dominant=rf["dominant"],
+                     compute_s=round(rf["compute_s"], 5),
+                     memory_s=round(rf["memory_s"], 5),
+                     collective_s=round(rf["collective_s"], 5),
+                     mfu_bound=round(rf["model_mfu_bound"], 4))
+    if sweep_transform:
+        sweep = transform_sweep(fast=fast)
+        if sweep:
+            lines += ["", "## Transform plan roofline (measured)", "",
+                      TRANSFORM_HEADER, TRANSFORM_SEP]
+            for t in sweep:
+                lines.append(transform_row(t))
+                entry = t["roofline"]
+                if entry is not None:
+                    rf = entry["roofline"]
+                    emit(f"roofline_transform_n{t['n']}_m{t['m']}"
+                         f"_{t['precision']}",
+                         entry.get("us", {}).get(t["winner"], 0.0),
+                         winner=t["winner"],
+                         peak_gflops=rf["peak_gflops"],
+                         peak_gbs=rf["peak_gbs"],
+                         ridge=rf["ridge_flop_per_byte"])
+    if not lines:
         return
-    lines = [HEADER, SEP]
-    for r in recs:
-        lines.append(row(r))
-        if r["status"] == "ok":
-            rf = r["roofline"]
-            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
-                 f"{'' if r.get('variant', 'baseline') == 'baseline' else '_opt'}",
-                 rf["roofline_step_s"] * 1e6,
-                 dominant=rf["dominant"],
-                 compute_s=round(rf["compute_s"], 5),
-                 memory_s=round(rf["memory_s"], 5),
-                 collective_s=round(rf["collective_s"], 5),
-                 mfu_bound=round(rf["model_mfu_bound"], 4))
     os.makedirs(os.path.dirname(md_path), exist_ok=True)
     with open(md_path, "w") as f:
         f.write("\n".join(lines) + "\n")
-    print(f"# wrote {md_path} ({len(recs)} cells)")
+    print(f"# wrote {md_path} ({len(recs)} dryrun cells)")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,38 @@ def _assert_stream_speedup() -> None:
           flush=True)
 
 
+def _assert_serve_gate() -> None:
+    """Acceptance gates for the latency-SLO serving tier (DESIGN.md §8):
+
+    * at the saturated load point (2x the single-request service rate) the
+      continuous-batching p99 must beat the request-at-a-time p99 — the
+      whole point of coalescing;
+    * the gated quantized transform tier(s) must out-throughput bf16
+      (int8 everywhere; fp8 only where hardware executes e4m3 natively —
+      ``gated`` is set per-row by bench_serve_tiers).
+    """
+    import json
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows if not r.get("stale")]
+    serve = [r for r in fresh if r.get("mode") == "serve"]
+    assert serve, "no fresh serve rows were measured"
+    sat = [r for r in serve if r["load"] >= 2.0]
+    assert sat, f"no saturated-load serve row: {serve}"
+    bad = [r for r in sat if r["p99_batched_ms"] > r["p99_single_ms"]]
+    assert not bad, f"continuous batching lost on p99 at saturation: {bad}"
+    tiers = [r for r in fresh
+             if str(r.get("mode", "")).startswith("serve_tier_")
+             and r.get("gated")]
+    assert tiers, "no gated quantized serve_tier rows were measured"
+    slow = [r for r in tiers if r["vs_bf16"] < 1.0]
+    assert not slow, f"quantized tier slower than bf16: {slow}"
+    print(f"# serve gate passed: p99 {sat[0]['p99_batched_ms']}ms batched vs "
+          f"{sat[0]['p99_single_ms']}ms single at load 2.0; "
+          f"quant vs bf16 {[r['vs_bf16'] for r in tiers]}x", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -90,6 +122,13 @@ def main() -> None:
                          "full refit at m in {256,1024,4096}; appends "
                          "mode=stream rows to BENCH_rskpca.json and fails "
                          "on any update_speedup < 1.0")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-latency bench: Poisson open-loop p50/p99 "
+                         "of continuous batching vs request-at-a-time, plus "
+                         "precision-tier throughput; appends mode=serve "
+                         "rows to BENCH_rskpca.json and fails if batching "
+                         "loses on p99 at saturation or a gated quantized "
+                         "tier is slower than bf16")
     args = ap.parse_args()
     fast = not args.full
     if args.mesh and not args.smoke:
@@ -104,6 +143,15 @@ def main() -> None:
         print("# --- rskpca streaming update vs refit ---", flush=True)
         rskpca_scale.bench_stream(fast=fast)
         _assert_stream_speedup()
+        if not args.smoke and not args.serve:
+            return
+
+    if args.serve:
+        from benchmarks import serve_latency
+        print("# --- rskpca serving latency (continuous batching) ---",
+              flush=True)
+        serve_latency.bench_serve(fast=fast)
+        _assert_serve_gate()
         if not args.smoke:
             return
 

@@ -1,0 +1,194 @@
+"""Poisson open-loop serving latency: continuous batching vs one-at-a-time.
+
+The latency section replays ONE Poisson arrival trace (seeded, open-loop:
+requests arrive on schedule whether or not the server kept up) against two
+front ends over the SAME hot-swap server:
+
+  * ``single`` — a BatchingFrontEnd whose ``max_batch`` equals the request
+    size, so every dispatch carries exactly one request: the
+    request-at-a-time baseline, same dispatcher machinery, no coalescing;
+  * ``batched`` — continuous batching (max_batch >> request size): arrivals
+    landing while a batch is in flight coalesce into the next one.
+
+Arrival rates are derived from the measured single-request service time
+``s0`` — ``0.5/s0`` (half load) and ``2.0/s0`` (2x saturated for the
+baseline) — so the bench is meaningful on any machine speed.  At 2x
+saturation the baseline's queue grows without bound and its p99 explodes;
+continuous batching amortizes dispatch overhead across queued requests and
+stays bounded.  run.py --serve gates on the batched p99 beating the
+baseline p99 at the saturated rate.
+
+The tier section measures bulk transform THROUGHPUT (rows/s) of each
+precision tier through the autotuned plan, quantized tiers served from a
+publish-time (Aq, scales) pair exactly as swap.HotSwapServer does.  run.py
+gates quantized-beats-bf16 on the best quantized tier: int8 carries the
+gate everywhere (integer matmul), fp8 is recorded but ungated off-TPU
+(e4m3 arithmetic is software-emulated on CPU).
+
+Appends ``mode="serve"`` (latency) and ``mode="serve_tier_*"`` (throughput)
+rows to BENCH_rskpca.json.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.rskpca_scale import (BENCH_JSON, _merge_into_bench,
+                                     _timed_interleaved)
+
+#: Load points as fractions of single-request saturation (1/s0); the int
+#: percentage doubles as the stable row key (mode="serve", n=load_pct).
+LOADS = (0.5, 2.0)
+
+
+def _build_server(m: int, d: int, rank: int, precision: str = "f32",
+                  chunk: int = 1024):
+    from repro import streaming
+    from repro.core import gaussian
+    from repro.core.rsde import RSDE
+
+    rng = np.random.default_rng(0)
+    c = (rng.normal(size=(m, d)) * 2.0).astype(np.float32)
+    w = rng.integers(1, 8, m).astype(np.float64)
+    rsde = RSDE(c, w, n=float(w.sum()), scheme="bench")
+    ker = gaussian(1.0, precision=precision)
+    st = streaming.from_rsde(rsde, ker, rank, eps=0.4, cap=m)
+    return streaming.HotSwapServer(st, chunk=chunk)
+
+
+def _warm_buckets(srv, d: int, lo: int, hi: int) -> None:
+    """Compile every pow2 serving bucket in [lo, hi] up front: the latency
+    runs must measure serving, not tracing."""
+    b = lo
+    while b <= hi:
+        np.asarray(srv.transform(np.zeros((b, d), np.float32)))
+        b *= 2
+
+
+def _open_loop(frontend, reqs, arrivals) -> np.ndarray:
+    """Replay the arrival schedule; per-request latency (s), completion
+    measured on the dispatcher thread via the future's done-callback."""
+    lat = [None] * len(reqs)
+    futs = []
+    t0 = time.monotonic()
+    for k, (x, at) in enumerate(zip(reqs, arrivals)):
+        target = t0 + at
+        now = time.monotonic()
+        if target > now:
+            time.sleep(target - now)
+        arrived = time.monotonic()
+
+        def cb(f, k=k, arrived=arrived):
+            lat[k] = time.monotonic() - arrived
+
+        futs.append(frontend.submit(x))
+        futs[-1].add_done_callback(cb)
+    for f in futs:
+        f.result(timeout=300)
+    return np.asarray(lat, np.float64)
+
+
+def bench_serve(fast: bool = True, m: int = 512, d: int = 16, rank: int = 8,
+                req_rows: int = 4, max_batch: int = 256):
+    """Latency + tier-throughput rows; returns the fresh rows."""
+    from repro.serving import BatchingFrontEnd
+
+    srv = _build_server(m, d, rank)
+    _warm_buckets(srv, d, req_rows, max_batch)
+
+    rng = np.random.default_rng(7)
+    n_req = 120 if fast else 300
+    pool = [(rng.normal(size=(req_rows, d)) * 2.0).astype(np.float32)
+            for _ in range(n_req)]
+
+    # measured single-request service time anchors the arrival rates
+    s0 = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        np.asarray(srv.transform(pool[0]))
+        s0 = min(s0, time.perf_counter() - t0)
+
+    rows = []
+    for load in LOADS:
+        rate = load / s0
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_req))
+        lats = {}
+        stats = {}
+        for name, mb in (("single", req_rows), ("batched", max_batch)):
+            fe = BatchingFrontEnd(srv, max_batch=mb, slo_ms=1000.0)
+            try:
+                lats[name] = _open_loop(fe, pool, arrivals)
+            finally:
+                fe.close()
+            stats[name] = fe.stats
+        p = {f"p{q}_{name}_ms": round(
+                float(np.percentile(lats[name], q)) * 1e3, 2)
+             for name in lats for q in (50, 99)}
+        row = dict(
+            n=int(load * 100), mode="serve", load=load,
+            rate_hz=round(rate, 1), requests=n_req, req_rows=req_rows,
+            m=m, service_s0_ms=round(s0 * 1e3, 3), **p,
+            p99_speedup=round(p["p99_single_ms"]
+                              / max(p["p99_batched_ms"], 1e-3), 2),
+            batches_single=stats["single"].batches,
+            batches_batched=stats["batched"].batches,
+            max_batch_rows=stats["batched"].max_batch_rows,
+        )
+        rows.append(row)
+        emit(f"rskpca_serve_load{row['n']}", p["p99_batched_ms"] * 1e3,
+             **{k: v for k, v in row.items() if k not in ("n", "mode")})
+
+    rows += bench_serve_tiers(fast=fast, m=m, d=d, rank=rank)
+    _merge_into_bench(rows)
+    print(f"# appended serve rows to {BENCH_JSON}", flush=True)
+    return rows
+
+
+def bench_serve_tiers(fast: bool = True, m: int = 512, d: int = 16,
+                      rank: int = 8, n: int = 8192):
+    """Bulk-transform throughput per precision tier (autotuned plan each;
+    quantized projectors pre-quantized, as at snapshot publish)."""
+    import jax
+
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import quantize
+
+    rng = np.random.default_rng(1)
+    x = (rng.normal(size=(n, d)) * 2.0).astype(np.float32)
+    c = (rng.normal(size=(m, d)) * 2.0).astype(np.float32)
+    a = (rng.normal(size=(m, rank)) * 0.3).astype(np.float32)
+
+    def run(prec):
+        pq = (quantize.quantize_projector(a, prec)
+              if prec in quantize.QUANT_PRECISIONS else None)
+        return lambda: jax.block_until_ready(kernel_ops.kpca_project(
+            x, c, a, sigma=1.0, p=2, precision=prec, projector_q=pq))
+
+    tiers = ("f32", "bf16", "int8", "fp8")
+    best, _ = _timed_interleaved({p: run(p) for p in tiers},
+                                 reps=2 if fast else 3)
+    on_tpu = kernel_ops._on_tpu()
+    rows = []
+    for prec in tiers:
+        t = best[prec]
+        rows.append(dict(
+            m=m, mode=f"serve_tier_{prec}", n_rows=n,
+            transform_s=round(t, 5),
+            rows_per_s=round(n / t, 1),
+            vs_bf16=round(best["bf16"] / t, 2),
+            gated=bool(prec == "int8" or (prec == "fp8" and on_tpu)),
+        ))
+        emit(f"rskpca_serve_tier_{prec}", t * 1e6,
+             rows_per_s=rows[-1]["rows_per_s"], vs_bf16=rows[-1]["vs_bf16"])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    bench_serve(fast=not args.full)

@@ -28,9 +28,13 @@ _BACKENDS = ("pallas", "dense")
 
 #: Compute precision of the Gram-shaped matmuls: "f32" everywhere, or "bf16"
 #: operands on the MXU with f32 accumulation and an f32 exp nonlinearity
-#: (DESIGN.md §3; parity tolerances in tests/test_precision.py).
+#: (DESIGN.md §3; parity tolerances in tests/test_precision.py).  "int8" /
+#: "fp8" are the quantized SERVING tiers (DESIGN.md §8): they drop precision
+#: only in the kpca_project projector contraction (per-channel scales from
+#: kernels/quantize.py, f32 accumulation, error bounds property-tested in
+#: tests/test_quantized.py); every other Gram-shaped op runs them as bf16.
 DEFAULT_PRECISION = "f32"
-_PRECISIONS = ("f32", "bf16")
+_PRECISIONS = ("f32", "bf16", "int8", "fp8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +49,9 @@ class Kernel:
     ``precision`` selects the MXU operand dtype for those same ops: "f32"
     (default) or "bf16" (half the operand bandwidth; accumulation and the
     exp nonlinearity stay f32 — bf16-vs-f32 parity is tested with documented
-    tolerances in tests/test_precision.py).
+    tolerances in tests/test_precision.py).  "int8"/"fp8" additionally
+    quantize the serving projector contraction with per-channel scales
+    (kernels/quantize.py) — the low-latency transform tier.
     """
 
     name: str
@@ -65,7 +71,8 @@ class Kernel:
         if self.backend == "dense" and self.precision != "f32":
             raise ValueError(
                 "the dense backend is the f32 parity oracle and does not "
-                "honor reduced precision; use backend='pallas' for bf16")
+                "honor reduced precision; use backend='pallas' for "
+                "bf16/int8/fp8")
 
     def with_backend(self, backend: str) -> "Kernel":
         return dataclasses.replace(self, backend=backend)

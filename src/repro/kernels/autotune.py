@@ -204,6 +204,83 @@ def best(key: str, candidates: dict[str, Callable[[], object]],
         return winner
 
 
+def best_roofline(key: str, candidates: dict[str, Callable[[], object]],
+                  costs: dict[str, tuple[float, float]], default: str) -> str:
+    """Roofline-driven winner: measured bytes/FLOPs crossover, not raw time.
+
+    ``costs`` maps each candidate to its analytic ``(flops, bytes)`` for the
+    measured shape (the caller's cost model — e.g. per-tile HBM re-reads of
+    the centers/projector for the transform kernel).  Every candidate is
+    timed once (same warmup + best-of-``_REPS`` as ``best``); the
+    measurements are then used to estimate the device's achieved compute
+    peak ``P = max flops/t`` and bandwidth ``B = max bytes/t`` ACROSS the
+    candidate fleet, and the winner minimizes the roofline-predicted time
+
+        t_pred(c) = max(flops_c / P, bytes_c / B)
+
+    with measured time breaking near-ties (within 10%).  Unlike time-only
+    search, one noisy sample cannot crown a tile shape whose byte traffic
+    is strictly worse — the prediction uses analytic costs with fleet-level
+    peaks, so a slowdown window hitting one candidate perturbs P/B a little
+    rather than that candidate's ranking entirely.  The measured peaks, the
+    ridge point, and the per-candidate predictions are recorded alongside
+    the winner in the same schema-2 cache envelope as ``best``'s entries.
+    """
+    if not measurement_enabled():
+        return default
+    key = qualified(key)
+    with _LOCK:
+        _load_disk()
+        hit = _MEM.get(key)
+        if hit is not None and hit.get("winner") in candidates:
+            return hit["winner"]
+        if len(candidates) == 1:
+            return next(iter(candidates))
+        times: dict[str, float] = {}
+        for name, thunk in candidates.items():
+            try:
+                thunk()  # compile warmup
+                t = []
+                for _ in range(_REPS):
+                    t0 = time.perf_counter()
+                    thunk()
+                    t.append(time.perf_counter() - t0)
+                times[name] = min(t)
+            except Exception:
+                continue
+        if not times:
+            return default
+        peak_flops = max(costs[c][0] / t for c, t in times.items())
+        peak_bytes = max(costs[c][1] / t for c, t in times.items())
+        pred = {c: max(costs[c][0] / peak_flops, costs[c][1] / peak_bytes)
+                for c in times}
+        t_best = min(pred.values())
+        near = [c for c in pred if pred[c] <= 1.10 * t_best]
+        winner = min(near, key=times.get)
+        _MEM[key] = {
+            "winner": winner,
+            "us": {c: round(t * 1e6, 1) for c, t in times.items()},
+            "roofline": {
+                "peak_gflops": round(peak_flops / 1e9, 2),
+                "peak_gbs": round(peak_bytes / 1e9, 2),
+                "ridge_flop_per_byte": round(peak_flops / peak_bytes, 2),
+                "pred_us": {c: round(t * 1e6, 1) for c, t in pred.items()},
+            },
+        }
+        _save_disk()
+        return winner
+
+
+def roofline_entry(key: str) -> dict | None:
+    """The full recorded entry ({winner, us, roofline}) for an unqualified
+    key, if ``best_roofline`` measured it — benchmarks/roofline.py reads
+    these to report the transform crossover."""
+    with _LOCK:
+        _load_disk()
+        hit = _MEM.get(qualified(key))
+        return None if hit is None or "roofline" not in hit else hit
+
+
 def heuristic_plan(n: int, m: int, interpret: bool) -> str:
     """Deterministic dense/pallas crossover for when measurement is off."""
     cells = n * m

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import quantize as _quant
+
 Array = jax.Array
 
 
@@ -71,3 +73,83 @@ def kpca_project_pallas(x: Array, centers: Array, projector: Array, *,
         out_shape=jax.ShapeDtypeStruct((n, r), out_dtype),
         interpret=interpret,
     )(x, centers, projector)
+
+
+# --------------------------------------------------------------------------
+# quantized projector tier (int8 / fp8; kernels/quantize.py)
+# --------------------------------------------------------------------------
+
+
+def _project_kernel_quant(x_ref, c_ref, q_ref, s_ref, o_ref, *, sigma: float,
+                          p: int, qmode: str, sg: float):
+    # distances and the exp nonlinearity stay f32 — exactly the f32 kernel
+    # above; ONLY the projector contraction drops precision (DESIGN.md §8)
+    xf = x_ref[...].astype(jnp.float32)          # (bn, d)
+    cf = c_ref[...].astype(jnp.float32)          # (m, d)
+    xx = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    cc = jnp.sum(cf * cf, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(
+        xf, cf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    d2 = jnp.maximum(xx + cc - 2.0 * cross, 0.0)
+    if p == 2:
+        s = d2 / (sigma * sigma)
+    elif p == 1:
+        s = jnp.sqrt(d2) / sigma
+    else:
+        s = d2 ** (p / 2.0) / sigma**p
+    g = jnp.exp(-s)                              # (bn, m) f32, in [0, kappa]
+    scale = s_ref[...].astype(jnp.float32)       # (1, r) channel scales
+    if qmode == "int8":
+        # integer contraction with int32 accumulation: EXACT, so this path
+        # agrees bitwise with the dense quantized fallback in ops.py
+        gq = jnp.round(g * (1.0 / sg)).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            gq, q_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        o_ref[...] = (acc.astype(jnp.float32) * sg * scale).astype(
+            o_ref.dtype)
+    else:  # fp8: round operands to e4m3, accumulate f32.  The f32 upcast
+        # before the dot is exact on the rounded operands, so this IS the
+        # fp8-operand / f32-accumulation semantics on any backend (an
+        # fp8-MXU backend may fuse the cast away).
+        gq = g.astype(_quant.FP8_DTYPE)
+        acc = jax.lax.dot_general(
+            gq.astype(jnp.float32), q_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        o_ref[...] = (acc * scale).astype(o_ref.dtype)
+
+
+def kpca_project_quant_pallas(x: Array, centers: Array, q: Array,
+                              scale: Array, *, sigma: float, p: int = 2,
+                              qmode: str = "int8", block_n: int = 512,
+                              interpret: bool = False,
+                              out_dtype=jnp.float32) -> Array:
+    """Fused z ≈ k(x, C) @ A with the projector pre-quantized
+    (kernels/quantize.py): ``q`` (m, r) int8|fp8, ``scale`` (1, r) f32.
+    Padding contract as the f32 kernel: padded centers carry zero q rows,
+    padded scale columns are 1 and stripped by the caller."""
+    n, d = x.shape
+    m, d2_ = centers.shape
+    m2, r = q.shape
+    assert d == d2_ and m == m2 and n % block_n == 0
+    assert scale.shape == (1, r), scale.shape
+
+    kernel = functools.partial(
+        _project_kernel_quant, sigma=float(sigma), p=int(p), qmode=str(qmode),
+        sg=_quant.gram_scale(qmode))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), out_dtype),
+        interpret=interpret,
+    )(x, centers, q, scale)

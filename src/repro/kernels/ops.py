@@ -38,12 +38,17 @@ from repro.kernels import autotune
 from repro.kernels import gram as _gram
 from repro.kernels import shadow_assign as _assign
 from repro.kernels import kpca_project as _project
+from repro.kernels import quantize as _quantize
 
 Array = jax.Array
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
-_PRECISIONS = ("f32", "bf16")
+#: "int8"/"fp8" are the SERVING tiers (DESIGN.md §8): they quantize only the
+#: kpca_project projector contraction; every other Gram-shaped op (fit-side
+#: gram/gram_matvec/gram_row) treats them as the bf16 MXU tier, and
+#: shadow_assign always resolves distances in f32 regardless.
+_PRECISIONS = ("f32", "bf16") + _quantize.QUANT_PRECISIONS
 
 
 def _on_tpu() -> bool:
@@ -67,7 +72,9 @@ def _compute_dtype(precision: str):
     if precision not in _PRECISIONS:
         raise ValueError(
             f"unknown precision {precision!r}; expected one of {_PRECISIONS}")
-    return jnp.bfloat16 if precision == "bf16" else jnp.float32
+    # every reduced tier (bf16 AND the int8/fp8 serving tiers) feeds bf16
+    # operands to the non-projector MXU matmuls; f32 stays f32
+    return jnp.float32 if precision == "f32" else jnp.bfloat16
 
 
 def pick_gram_blocks(d: int, budget: int = _VMEM_BUDGET_BYTES):
@@ -161,6 +168,29 @@ def _project_dense(x, c, a, *, sigma, p, precision):
         g.astype(cd), a.astype(cd), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "p", "qmode"))
+def _project_dense_quant(x, c, q, s, *, sigma, p, qmode):
+    # dense fallback of the quantized serving tier: IDENTICAL quantized
+    # arithmetic to kernels/kpca_project._project_kernel_quant — the int8
+    # contraction accumulates in int32 (integer-exact), so this path and
+    # the Pallas path agree bitwise (asserted in tests/test_quantized.py)
+    d2 = _dense_sq_dists(x, c, "f32")
+    g = jnp.exp(-_dist_pow(d2, p) / sigma**p)
+    sj = jnp.asarray(s, jnp.float32)[None, :]
+    if qmode == "int8":
+        sg = _quantize.gram_scale(qmode)
+        gq = jnp.round(g * (1.0 / sg)).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            gq, q, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * sg * sj
+    gq = g.astype(_quantize.FP8_DTYPE)
+    acc = jax.lax.dot_general(
+        gq.astype(jnp.float32), q.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return acc * sj
 
 
 # --------------------------------------------------------------------------
@@ -271,8 +301,38 @@ def _assign_plan(n: int, m: int, d: int, interpret: bool) -> str:
     return autotune.best(key, cands, default="pallas")
 
 
+#: Row-tile candidates for the fused projection kernel.  Off-TPU the
+#: interpret-mode grid loop dominates, so larger tiles (fewer grid steps)
+#: tend to win; on hardware VMEM residency of the (bn, m) Gram block pulls
+#: the other way.  The roofline tuner picks among these from measured
+#: bytes/FLOPs crossovers, not raw time (autotune.best_roofline).
+_PROJECT_TILES_TPU = (256, 512, 1024)
+_PROJECT_TILES_INTERPRET = (512, 1024, 2048)
+
+
+def _project_costs(n: int, m: int, d: int, r: int, bn: int, dense: bool,
+                   precision: str) -> tuple[float, float]:
+    """Analytic (flops, bytes) of one projection at the measured shape.
+
+    FLOPs are plan-invariant: n rows x (distance matmul 2md + exp/dist
+    pointwise ~4m + projection matmul 2mr).  Bytes are where plans differ —
+    the fused kernel re-reads centers + projector from HBM once per grid
+    step, the dense fallback streams each once but writes AND re-reads the
+    materialized (n, m) Gram; a quantized projector moves 1 byte/element.
+    """
+    qb = 1.0 if precision in _quantize.QUANT_PRECISIONS else 4.0
+    flops = float(n) * (2.0 * m * d + 4.0 * m + 2.0 * m * r)
+    if dense:
+        byts = 4.0 * (n * d + m * d + n * r + 2.0 * n * m) + qb * m * r
+    else:
+        tiles = max(1, -(-n // bn))
+        byts = 4.0 * (n * d + n * r) + tiles * (4.0 * m * d + qb * m * r)
+    return flops, byts
+
+
 def _project_plan(n: int, m: int, d: int, r: int, precision: str,
                   interpret: bool) -> str:
+    """Roofline-tuned plan: "dense" or "pallas:<row-tile>"."""
     nb, mb = autotune.bucket(n), autotune.bucket(m)
     db = autotune.bucket(d, lo=8, hi=8192)
     rb = autotune.bucket(r, lo=8, hi=512)
@@ -281,17 +341,32 @@ def _project_plan(n: int, m: int, d: int, r: int, precision: str,
     mode = "interp" if interpret else "tpu"
     key = f"project|n{nb}|m{mb}|d{db}|r{rb}|{precision}|{mode}"
     x, c = _bench_rows(nb, db), _bench_rows(mb, db)
-    a = _bench_rows(mb, rb)
+    a = _bench_rows(c.shape[0], rb)
+    # pre-quantize the bench projector: the serving contract quantizes at
+    # snapshot publish, so per-call quantization must not pollute the timing
+    aq = (_quantize.quantize_projector(a, precision)
+          if precision in _quantize.QUANT_PRECISIONS else None)
 
     def run(plan):
         return lambda: jax.block_until_ready(kpca_project(
             x, c, a, sigma=1.0, p=2, interpret=interpret,
-            precision=precision, plan=plan))
+            precision=precision, plan=plan, projector_q=aq))
 
-    cands = {"pallas": run("pallas")}
+    neff, meff = x.shape[0], c.shape[0]
+    tiles = _PROJECT_TILES_INTERPRET if interpret else _PROJECT_TILES_TPU
+    cands, costs = {}, {}
+    for t in tiles:
+        name = f"pallas:{t}"
+        bn_eff = min(t, _round_up(neff, 128))
+        cands[name] = run(name)
+        costs[name] = _project_costs(neff, meff, db, rb, bn_eff,
+                                     dense=False, precision=precision)
     if nb * mb <= autotune.DENSE_MAX_CELLS:
         cands["dense"] = run("dense")
-    return autotune.best(key, cands, default="pallas")
+        costs["dense"] = _project_costs(neff, meff, db, rb, 0, dense=True,
+                                        precision=precision)
+    return autotune.best_roofline(key, cands, costs,
+                                  default=f"pallas:{tiles[0]}")
 
 
 # --------------------------------------------------------------------------
@@ -633,16 +708,28 @@ def _project_call(xp, cp, ap, *, sigma, p, bn, interpret):
                                         block_n=bn, interpret=interpret)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "p", "bn", "qmode", "interpret"),
+                   donate_argnums=(0,))
+def _project_call_quant(xp, cp, qp, sp, *, sigma, p, bn, qmode, interpret):
+    # same donation contract as _project_call: xp is an owned padded chunk
+    return _project.kpca_project_quant_pallas(
+        xp, cp, qp, sp, sigma=sigma, p=p, qmode=qmode, block_n=bn,
+        interpret=interpret)
+
+
 def projection_compile_count() -> int:
     """Total jit traces of the projection entry points (test hook for the
-    recompile-free serving contract)."""
-    return int(_project_call._cache_size() + _project_dense._cache_size())
+    recompile-free serving contract) — the quantized tier included."""
+    return int(_project_call._cache_size() + _project_dense._cache_size()
+               + _project_call_quant._cache_size()
+               + _project_dense_quant._cache_size())
 
 
 def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
                  chunk: int | None = None,
                  interpret: bool | None = None, precision: str = "f32",
-                 plan: str | None = None) -> Array:
+                 plan: str | None = None, projector_q=None) -> Array:
     """Fused z = k(x, C) @ A.  Pads m with zero projector rows (harmless:
     padded centers contribute k(x, 0-pad)*0).
 
@@ -653,6 +740,15 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     The tail slice is padded UP to the same fixed chunk and stripped after,
     so a ragged query stream compiles exactly once — the recompile-free
     serving contract (asserted in tests/test_kernels.py).
+
+    ``precision`` "int8"/"fp8" runs the quantized projector contraction
+    (kernels/quantize.py) — distances and the exp nonlinearity stay f32.
+    ``projector_q`` optionally supplies the pre-quantized ``(Aq, s)`` pair
+    (snapshot-publish caching, streaming/swap.py); when omitted the
+    projector is quantized here per call.
+
+    ``plan`` forces a compute plan: "dense", "pallas" (default row tile) or
+    "pallas:<row-tile>"; ``None`` asks the roofline autotuner.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -661,23 +757,45 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     projector = jnp.asarray(projector, jnp.float32)
     n, r = x.shape[0], projector.shape[1]
     m, d = centers.shape
+    quant = precision in _quantize.QUANT_PRECISIONS
+    if projector_q is not None and not quant:
+        raise ValueError(
+            f"projector_q only applies to {_quantize.QUANT_PRECISIONS}, "
+            f"got precision={precision!r}")
     if plan is None:
         plan = _project_plan(min(n, chunk or n), m, d, r, precision,
                              interpret)
-    cd = _compute_dtype(precision)
+    # the quantized tier keeps distance operands f32 (only the projector
+    # contraction drops precision); f32/bf16 tiers cast as before
+    cd = jnp.float32 if quant else _compute_dtype(precision)
     # pad m to a lane multiple; padded projector rows are zero so padded
     # centers cannot contribute
     cp = _pad_rows(centers, 128).astype(cd)
-    ap = _pad_rows(projector, 128)
     rp = _round_up(r, 128)
-    ap = jnp.pad(ap, ((0, 0), (0, rp - r)))
+    if quant:
+        if projector_q is None:
+            projector_q = _quantize.quantize_projector(projector, precision)
+        qv, qs = projector_q
+        # padded q rows/cols are zero (can't contribute); padded scale
+        # columns are 1 (never divide/NaN) and stripped with the output
+        qp = jnp.pad(qv, ((0, cp.shape[0] - m), (0, rp - r)))
+        sp = jnp.pad(jnp.asarray(qs, jnp.float32), (0, rp - r),
+                     constant_values=1.0).reshape(1, rp)
+    else:
+        ap = _pad_rows(projector, 128)
+        ap = jnp.pad(ap, ((0, 0), (0, rp - r)))
+    tile = int(plan.split(":", 1)[1]) if plan.startswith("pallas:") else 512
 
     def run(xs, owned):
         if plan == "dense":
+            if quant:
+                return _project_dense_quant(xs, centers, qv, qs,
+                                            sigma=float(sigma), p=int(p),
+                                            qmode=precision)
             return _project_dense(xs, centers, projector,
                                   sigma=float(sigma), p=int(p),
                                   precision=precision)
-        bn = min(512, _round_up(xs.shape[0], 128))
+        bn = min(tile, _round_up(xs.shape[0], 128))
         xsp = _pad_rows(xs, bn).astype(cd)
         if xsp is xs and not owned:
             # nothing was padded or cast, so xsp still IS the caller's
@@ -685,8 +803,13 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
             # memory we do not own would consume it out from under the
             # caller — copy first (the owned chunked slices skip this)
             xsp = jnp.array(xsp, copy=True)
-        out = _project_call(xsp, cp, ap, sigma=float(sigma), p=int(p),
-                            bn=bn, interpret=bool(interpret))
+        if quant:
+            out = _project_call_quant(xsp, cp, qp, sp, sigma=float(sigma),
+                                      p=int(p), bn=bn, qmode=precision,
+                                      interpret=bool(interpret))
+        else:
+            out = _project_call(xsp, cp, ap, sigma=float(sigma), p=int(p),
+                                bn=bn, interpret=bool(interpret))
         return out[: xs.shape[0], :r]
 
     if chunk is None or n <= chunk:

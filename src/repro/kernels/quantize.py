@@ -1,0 +1,114 @@
+"""Low-precision projector tier for the serving transform (DESIGN.md §8).
+
+The serving hot path is z = g @ A with g = k(x, C) ∈ [0, kappa]^m per row and
+A the (m, r) projector.  Distances and the exp nonlinearity stay f32 (they
+feed the same numerics as assignment, which must never change precision);
+only the projector CONTRACTION — the m-deep matmul that dominates transform
+bytes at serving batch sizes — drops precision:
+
+  * ``int8``: per-channel symmetric scales.  Column j of A gets
+    s_j = max_i |A_ij| / 127 and Aq = round(A / s) (int8); the Gram row is
+    quantized against the STATIC range [0, kappa]: sg = kappa / 127,
+    gq = round(g / sg).  The contraction is an integer matmul with int32
+    accumulation — exact — so the Pallas and dense quantized paths agree
+    BITWISE, and z ≈ (gq @ Aq) * sg * s.
+  * ``fp8`` (e4m3fn): per-channel scales s_j = max_i |A_ij| / 448 put each
+    column onto the format's full range; g ∈ [0, kappa] already sits inside
+    e4m3's range and casts unscaled.  The contraction runs on fp8-rounded
+    operands with f32 accumulation (casting the rounded operands up to f32
+    before the dot IS that semantics exactly, and is what non-fp8-MXU
+    backends execute).
+
+Scales are computed at snapshot-PUBLISH time (streaming/swap.py), never per
+query batch: a publish pays one O(m r) pass, every serve reuses the cached
+(Aq, s) pair from the swap tuple.
+
+Worst-case error bounds (per output channel, derived below, property-tested
+in tests/test_quantized.py) close the loop with the Theorem-5.x budget
+machinery: a serving tier is admissible when its projection-error bound is
+small against the spectral budget the operator already spends (DESIGN.md
+§8).  Writing Δg, ΔA for the rounding perturbations,
+
+    |z_j - ẑ_j| <= Σ_i |Δg_i||A_ij| + Σ_i ĝ_i |ΔA_ij|
+
+  * int8:  |Δg| <= sg/2,  |ΔA_ij| <= s_j/2,  ĝ <= kappa
+           bound_j = (sg/2) ||A_:j||_1 + kappa m s_j / 2
+  * fp8:   |Δg| <= u·kappa + q,  |ΔA_ij| <= u|A_ij| + s_j q,  ĝ <= (1+u)kappa
+           with u = 2^-4 (half-ulp of the 3-bit mantissa) and q = 2^-10
+           (half of e4m3fn's smallest subnormal)
+           bound_j = (u kappa + q) ||A_:j||_1
+                     + (1+u) kappa (u ||A_:j||_1 + m s_j q)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: Precisions served by this module; ``Kernel.precision`` accepts these in
+#: addition to the f32/bf16 tiers (core/kernels_math.py).
+QUANT_PRECISIONS = ("int8", "fp8")
+
+INT8_QMAX = 127.0
+FP8_DTYPE = jnp.float8_e4m3fn
+FP8_MAX = 448.0          # largest finite e4m3fn value
+FP8_U = 2.0 ** -4        # half-ulp relative roundoff (3 mantissa bits)
+FP8_Q = 2.0 ** -10       # half of the smallest subnormal (2^-9)
+
+
+def gram_scale(precision: str, kappa: float = 1.0) -> float:
+    """Static quantization scale of the Gram row: kernel values live in
+    [0, kappa] by construction, so the range never needs measuring."""
+    assert precision in QUANT_PRECISIONS, precision
+    return kappa / INT8_QMAX if precision == "int8" else 1.0
+
+
+def channel_scales(projector: Array, precision: str) -> Array:
+    """(r,) per-channel symmetric scales; an all-zero channel gets scale 1
+    (its quantized values are all zero either way, and 1 never divides-by-0
+    or NaN-poisons the dequantized output)."""
+    assert precision in QUANT_PRECISIONS, precision
+    qmax = INT8_QMAX if precision == "int8" else FP8_MAX
+    amax = jnp.max(jnp.abs(jnp.asarray(projector, jnp.float32)), axis=0)
+    return jnp.where(amax > 0.0, amax / qmax, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def quantize_projector(projector: Array, precision: str):
+    """(Aq, s): the quantized (m, r) projector and its (r,) channel scales.
+
+    Runs as one jitted device pass — this is the snapshot-publish step; the
+    pair is cached in the swap tuple and reused by every serve until the
+    next publish (streaming/swap.py).
+    """
+    a = jnp.asarray(projector, jnp.float32)
+    s = channel_scales(a, precision)
+    if precision == "int8":
+        q = jnp.clip(jnp.round(a / s[None, :]), -INT8_QMAX, INT8_QMAX)
+        return q.astype(jnp.int8), s
+    return (a / s[None, :]).astype(FP8_DTYPE), s
+
+
+def dequantize_projector(q: Array, s: Array) -> Array:
+    """f32 view of a quantized projector (the parity oracle's operand)."""
+    return q.astype(jnp.float32) * jnp.asarray(s, jnp.float32)[None, :]
+
+
+def projection_error_bound(projector: Array, precision: str,
+                           kappa: float = 1.0) -> Array:
+    """(r,) worst-case |z_j - ẑ_j| per output channel (derivation in the
+    module docstring).  Holds for EVERY query row — the hypothesis property
+    in tests/test_quantized.py sweeps random queries against it."""
+    assert precision in QUANT_PRECISIONS, precision
+    a = jnp.asarray(projector, jnp.float32)
+    m = a.shape[0]
+    s = channel_scales(a, precision)
+    l1 = jnp.sum(jnp.abs(a), axis=0)
+    if precision == "int8":
+        sg = gram_scale(precision, kappa)
+        return 0.5 * sg * l1 + 0.5 * kappa * m * s
+    u, q = FP8_U, FP8_Q
+    return (u * kappa + q) * l1 + (1.0 + u) * kappa * (u * l1 + m * s * q)

@@ -1,0 +1,6 @@
+# Latency-SLO serving tier (DESIGN.md §8): a continuous-batching front end
+# over the hot-swap transform — deadline-aware request coalescing into the
+# power-of-two padding buckets the compiled projection already serves.
+from repro.serving.batching import (  # noqa: F401
+    BatchingFrontEnd, ServeStats,
+)

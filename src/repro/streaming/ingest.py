@@ -37,24 +37,29 @@ def compact(state: StreamingRSKPCA, cap: int | None = None) -> StreamingRSKPCA:
     dead rows), which resets ``err_est`` — compaction doubles as a refresh
     point.  Changing ``cap`` re-traces downstream programs once per bucket.
     """
-    w = np.asarray(state.weights)
-    live = np.flatnonzero(w > 0)
+    wc = np.asarray(state.wcount)
+    wf = np.asarray(state.wfrac)
+    live = np.flatnonzero((wc > 0) | (wf > 0))
     m = live.size
     if cap is None:
         cap = (4 * m) // 3  # same ~1/3 headroom rule as from_rsde
     cap = _pow2_ceil(max(128, cap, m))
     centers = np.zeros((cap, state.d), np.float32)
     centers[:m] = np.asarray(state.centers)[live]
-    weights = np.zeros((cap,), np.float32)
-    weights[:m] = w[live]
+    # the split mass accumulators gather exactly — no f32 recompose/resplit
+    wcount = np.zeros((cap,), np.int32)
+    wcount[:m] = wc[live]
+    wfrac = np.zeros((cap,), np.float32)
+    wfrac[:m] = wf[live]
     kgram = np.zeros((cap, cap), np.float32)
     kgram[:m, :m] = np.asarray(state.kgram)[np.ix_(live, live)]
     centers = jnp.asarray(centers)
-    weights = jnp.asarray(weights)
+    weights = jnp.asarray(wcount.astype(np.float32) + wfrac)
     kgram = jnp.asarray(kgram)
     lam, u = solve_jit(kgram, weights, state.n, rank1=state.rank + 1)
     return dataclasses.replace(
-        state, centers=centers, weights=weights, kgram=kgram,
+        state, centers=centers, wcount=jnp.asarray(wcount),
+        wfrac=jnp.asarray(wfrac), kgram=kgram,
         eigvals=lam, u=u, err_est=jnp.float32(0.0),
         resid=jnp.float32(0.0), n_patched=jnp.int32(0))
 

@@ -51,11 +51,24 @@ from repro.core.shadow import _pow2_ceil  # single bucketing rule repo-wide
 
 @dataclasses.dataclass(frozen=True)
 class StreamingRSKPCA:
+    """Stream masses are SPLIT accumulators: ``wcount``/``ncount`` hold the
+    integer unit counts (int32 — exact up to 2^31) and ``wfrac``/``nfrac``
+    the fractional residuals (f32).  A single f32 accumulator saturates at
+    2^24: ``n + 1.0 == n`` there, so a long-running stream's mass silently
+    stops growing and every Theorem-5.x bound (which divides by n) goes
+    stale.  Unit-mass ingest adds to the int part — exact at any stream
+    length (regression-tested past 2^24 in tests/test_streaming.py); the
+    f32 ``weights``/``n`` views below are recomposed on read for the
+    normalized operator, where relative (not absolute) error is what
+    matters."""
+
     # --- pytree leaves ---
     centers: Array    # (cap, d) center buffer; dead slots hold stale rows
-    weights: Array    # (cap,) f32 shadow masses; 0 marks a dead slot
+    wcount: Array     # (cap,) int32 integer part of the shadow masses
+    wfrac: Array      # (cap,) f32 fractional residual of the shadow masses
     kgram: Array      # (cap, cap) unweighted k(c_i, c_j) cache
-    n: Array          # () f32 total stream mass (weights sum to n)
+    ncount: Array     # () int32 integer part of the total stream mass
+    nfrac: Array      # () f32 fractional residual of the total stream mass
     eigvals: Array    # (rank+1,) eigenvalues of K-tilde/n, descending
     u: Array          # (cap, rank+1) orthonormal eigenvectors
     err_est: Array    # () f32 accumulated perturbation since last exact solve
@@ -77,13 +90,25 @@ class StreamingRSKPCA:
         return self.centers.shape[1]
 
     @property
+    def weights(self) -> Array:
+        """(cap,) f32 view of the shadow masses (count + residual); 0 marks
+        a dead slot.  The split leaves are the source of truth — mutate
+        those, never this view."""
+        return self.wcount.astype(jnp.float32) + self.wfrac
+
+    @property
+    def n(self) -> Array:
+        """() f32 view of the total stream mass (weights sum to n)."""
+        return self.ncount.astype(jnp.float32) + self.nfrac
+
+    @property
     def alive(self) -> Array:
-        return self.weights > 0
+        return (self.wcount > 0) | (self.wfrac > 0)
 
     @property
     def m(self) -> int:
         """Number of live centers (host sync)."""
-        return int(jnp.sum(self.weights > 0))
+        return int(jnp.sum(self.alive))
 
     @property
     def gap(self) -> float:
@@ -103,11 +128,14 @@ class StreamingRSKPCA:
     def as_rsde(self) -> RSDE:
         """Host snapshot of the live centers as an RSDE — the 'equivalent
         center set' a from-scratch fit would see (property tests)."""
-        alive = np.asarray(self.weights) > 0
+        # recompose masses in f64 on host: exact for any int32 count
+        w64 = (np.asarray(self.wcount, np.float64)
+               + np.asarray(self.wfrac, np.float64))
+        alive = w64 > 0
         return RSDE(
             centers=np.asarray(self.centers)[alive],
-            weights=np.asarray(self.weights, np.float64)[alive],
-            n=float(self.n),
+            weights=w64[alive],
+            n=float(np.float64(int(self.ncount)) + float(self.nfrac)),
             scheme="streaming",
         )
 
@@ -137,8 +165,8 @@ class StreamingRSKPCA:
 
 
 def _flatten(s: StreamingRSKPCA):
-    leaves = (s.centers, s.weights, s.kgram, s.n, s.eigvals, s.u,
-              s.err_est, s.resid, s.n_patched)
+    leaves = (s.centers, s.wcount, s.wfrac, s.kgram, s.ncount, s.nfrac,
+              s.eigvals, s.u, s.err_est, s.resid, s.n_patched)
     aux = (s.kernel, s.rank, s.eps, s.budget)
     return leaves, aux
 
@@ -199,15 +227,24 @@ def from_rsde(rsde: RSDE, kernel: Kernel, rank: int, *,
     cap = _pow2_ceil(max(128, cap, m))
     centers = np.zeros((cap, rsde.centers.shape[1]), np.float32)
     centers[:m] = np.asarray(rsde.centers, np.float32)
-    weights = np.zeros((cap,), np.float32)
-    weights[:m] = np.asarray(rsde.weights, np.float32)
+    # split each mass into int32 count + f32 residual (see the class
+    # docstring: single-f32 accumulators saturate at 2^24)
+    wf64 = np.asarray(rsde.weights, np.float64)
+    wcount = np.zeros((cap,), np.int32)
+    wfrac = np.zeros((cap,), np.float32)
+    wcount[:m] = np.floor(wf64).astype(np.int32)
+    wfrac[:m] = (wf64 - np.floor(wf64)).astype(np.float32)
+    ncount = int(np.floor(float(rsde.n)))
+    nfrac = float(rsde.n) - ncount
     centers = jnp.asarray(centers)
-    weights = jnp.asarray(weights)
+    weights = jnp.asarray(wcount.astype(np.float32) + wfrac)
     kgram = gram_matrix(kernel, centers, centers)
     n = jnp.asarray(float(rsde.n), jnp.float32)
     lam, u = solve_jit(kgram, weights, n, rank1=rank + 1)
     return StreamingRSKPCA(
-        centers=centers, weights=weights, kgram=kgram, n=n,
+        centers=centers, wcount=jnp.asarray(wcount),
+        wfrac=jnp.asarray(wfrac), kgram=kgram,
+        ncount=jnp.int32(ncount), nfrac=jnp.float32(nfrac),
         eigvals=lam, u=u,
         err_est=jnp.float32(0.0), resid=jnp.float32(0.0),
         n_patched=jnp.int32(0),
@@ -224,8 +261,10 @@ def _template(cap: int, d: int, kernel: Kernel, rank: int, eps: float,
               budget: float) -> StreamingRSKPCA:
     z = jnp.zeros
     return StreamingRSKPCA(
-        centers=z((cap, d), jnp.float32), weights=z((cap,), jnp.float32),
-        kgram=z((cap, cap), jnp.float32), n=jnp.float32(0.0),
+        centers=z((cap, d), jnp.float32),
+        wcount=z((cap,), jnp.int32), wfrac=z((cap,), jnp.float32),
+        kgram=z((cap, cap), jnp.float32),
+        ncount=jnp.int32(0), nfrac=jnp.float32(0.0),
         eigvals=z((rank + 1,), jnp.float32),
         u=z((cap, rank + 1), jnp.float32),
         err_est=jnp.float32(0.0), resid=jnp.float32(0.0),

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kernel_ops
+from repro.kernels import quantize
 from repro.streaming.state import StreamingRSKPCA
 
 
@@ -33,17 +34,29 @@ class HotSwapServer:
                  chunk: int = 1024):
         self.chunk = int(chunk)
         self.version = 0
-        self._snapshot = None  # (centers, projector, kernel), swapped whole
+        # (centers, projector, kernel, projector_q), swapped whole
+        self._snapshot = None
         if state is not None:
             self.publish(state)
 
     def publish(self, state: StreamingRSKPCA) -> int:
         """Atomically swap in the state's current operator: the snapshot is
         a SINGLE attribute store (one tuple), so a concurrent reader sees
-        either the old or the new operator, never a mix."""
-        self._snapshot = (jnp.asarray(state.centers),
-                          jnp.asarray(state.projector),
-                          state.kernel)
+        either the old or the new operator, never a mix.
+
+        On a quantized serving tier (kernel.precision int8/fp8) the publish
+        also quantizes the projector — one O(cap x rank) jitted pass — and
+        caches the (Aq, scales) pair in the swap tuple, so serves never pay
+        per-batch quantization and in-flight batches keep the pair they
+        already read."""
+        centers = jnp.asarray(state.centers)
+        projector = jnp.asarray(state.projector)
+        kernel = state.kernel
+        projector_q = (quantize.quantize_projector(projector,
+                                                   kernel.precision)
+                       if kernel.precision in quantize.QUANT_PRECISIONS
+                       else None)
+        self._snapshot = (centers, projector, kernel, projector_q)
         self.version += 1
         return self.version
 
@@ -59,7 +72,7 @@ class HotSwapServer:
         # pair the new centers with the old projector
         snapshot = self._snapshot
         assert snapshot is not None, "publish() an operator before serving"
-        centers, projector, kernel = snapshot
+        centers, projector, kernel, projector_q = snapshot
         if mesh is not None:
             from repro.core import distributed as dist
             z = dist.sharded_kpca_project(
@@ -69,5 +82,5 @@ class HotSwapServer:
         z = kernel_ops.kpca_project(
             x, centers, projector,
             sigma=kernel.sigma, p=kernel.p, chunk=self.chunk,
-            precision=kernel.precision)
+            precision=kernel.precision, projector_q=projector_q)
         return np.asarray(z)

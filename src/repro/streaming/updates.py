@@ -68,18 +68,24 @@ def _rr_patch(kgram: Array, w: Array, n: Array, basis: Array, rank1: int):
     return theta, _canonicalize_signs(u), resid
 
 
-def _maintain(state: StreamingRSKPCA, centers: Array, weights: Array,
-              kgram: Array, n: Array, err: Array,
-              slots: Array) -> StreamingRSKPCA:
+def _maintain(state: StreamingRSKPCA, centers: Array, wcount: Array,
+              wfrac: Array, kgram: Array, ncount: Array, nfrac: Array,
+              err: Array, slots: Array, n_ok) -> StreamingRSKPCA:
     """Patch-or-resolve decision shared by every update entry point.
 
     ``err`` already includes the new updates' accumulated Theorem-5.x
     bounds; ``slots`` are the touched center indices whose coordinate axes
     augment the Rayleigh–Ritz basis (duplicates and dead-slot no-ops are
-    harmless: QR just sees a rank-deficient tail).
+    harmless: QR just sees a rank-deficient tail).  ``n_ok`` is the number
+    of REAL updates in this maintenance — the masked padding rows of a
+    ragged ingest batch are no-ops and must not inflate the patch
+    accounting (``n_patched`` feeds the budget diagnostics; counting
+    phantom rows made compaction look overdue on ragged streams).
     """
     rank1 = state.rank + 1
     cap = state.cap
+    weights = wcount.astype(jnp.float32) + wfrac
+    n = ncount.astype(jnp.float32) + nfrac
     onehots = jax.nn.one_hot(slots, cap, dtype=jnp.float32).T  # (cap, B)
     basis = jnp.concatenate([state.u, onehots], axis=1)
     do_patch = err <= state.budget
@@ -92,13 +98,15 @@ def _maintain(state: StreamingRSKPCA, centers: Array, weights: Array,
         return lam, u, jnp.float32(0.0)
 
     lam, u, resid = jax.lax.cond(do_patch, patch, resolve, operand=None)
-    nb = slots.shape[0]
     return dataclasses.replace(
-        state, centers=centers, weights=weights, kgram=kgram, n=n,
+        state, centers=centers, wcount=wcount, wfrac=wfrac, kgram=kgram,
+        ncount=ncount, nfrac=nfrac,
         eigvals=lam, u=u,
         err_est=jnp.where(do_patch, err, 0.0),
         resid=resid,
-        n_patched=jnp.where(do_patch, state.n_patched + nb, 0),
+        n_patched=jnp.where(do_patch,
+                            state.n_patched + jnp.asarray(n_ok, jnp.int32),
+                            0),
     )
 
 
@@ -126,20 +134,24 @@ def ingest_batch(state: StreamingRSKPCA, xb: Array,
         else valid.astype(bool)
 
     def row(carry, inp):
-        centers, w, kgram, n, err = carry
+        centers, wc, wf, kgram, nc, nf, err = carry
         x, ok = inp
         krow, d2 = kernel_ops.gram_row(
             x, centers, sigma=kernel.sigma, p=kernel.p)
-        alive = w > 0
+        alive = (wc > 0) | (wf > 0)
         d2m = jnp.where(alive, d2, jnp.inf)
         j_near = jnp.argmin(d2m)
         has_free = jnp.any(~alive)
         absorb = (d2m[j_near] < eps2) | ~has_free
         j = jnp.where(absorb, j_near, jnp.argmin(alive))  # first dead slot
-        delta = mmd_mod.weight_update_bound(n, n + 1.0, w[j], w[j] + 1.0,
+        w_j = wc[j].astype(jnp.float32) + wf[j]
+        n = nc.astype(jnp.float32) + nf
+        delta = mmd_mod.weight_update_bound(n, n + 1.0, w_j, w_j + 1.0,
                                             kappa=kernel.kappa)
-        w = w.at[j].add(jnp.where(ok, 1.0, 0.0))
-        n = n + jnp.where(ok, 1.0, 0.0)
+        # unit mass lands in the INT accumulator — exact at any stream
+        # length (a single f32 add saturates at 2^24; class docstring)
+        wc = wc.at[j].add(jnp.where(ok, 1, 0))
+        nc = nc + jnp.where(ok, 1, 0)
         err = err + jnp.where(ok, delta, 0.0)
 
         def insert(args):
@@ -149,14 +161,17 @@ def ingest_batch(state: StreamingRSKPCA, xb: Array,
 
         centers, kgram = jax.lax.cond(ok & ~absorb, insert, lambda a: a,
                                       (centers, kgram))
-        return (centers, w, kgram, n, err), j
+        return (centers, wc, wf, kgram, nc, nf, err), j
 
-    (centers, w, kgram, n, err), slots = jax.lax.scan(
+    (centers, wc, wf, kgram, nc, nf, err), slots = jax.lax.scan(
         row,
-        (state.centers, state.weights, state.kgram, state.n, state.err_est),
+        (state.centers, state.wcount, state.wfrac, state.kgram,
+         state.ncount, state.nfrac, state.err_est),
         (jnp.asarray(xb, jnp.float32), ok_b),
     )
-    return _maintain(state, centers, w, kgram, n, err, slots)
+    # real (unmasked) updates only — padding rows must not count
+    n_ok = jnp.sum(ok_b.astype(jnp.int32))
+    return _maintain(state, centers, wc, wf, kgram, nc, nf, err, slots, n_ok)
 
 
 def insert(state: StreamingRSKPCA, x) -> StreamingRSKPCA:
@@ -173,15 +188,21 @@ def remove(state: StreamingRSKPCA, j) -> StreamingRSKPCA:
     with n = 0 is undefined (every normalization divides by n), so the last
     live center can only leave via ``replace``."""
     j = jnp.asarray(j, jnp.int32)
-    w_j = state.weights[j]
+    wcj, wfj = state.wcount[j], state.wfrac[j]
+    w_j = wcj.astype(jnp.float32) + wfj
     ok = w_j < state.n  # refuse to empty the operator
     w_j = jnp.where(ok, w_j, 0.0)
     delta = mmd_mod.weight_update_bound(
         state.n, state.n - w_j, w_j, 0.0, kappa=state.kernel.kappa)
-    weights = state.weights.at[j].set(
-        jnp.where(ok, 0.0, state.weights[j]))
-    return _maintain(state, state.centers, weights, state.kgram,
-                     state.n - w_j, state.err_est + delta, j[None])
+    wcount = state.wcount.at[j].set(jnp.where(ok, 0, wcj))
+    wfrac = state.wfrac.at[j].set(jnp.where(ok, 0.0, wfj))
+    # mass leaves by exact integer/fraction subtraction, never via the
+    # rounded f32 view
+    ncount = state.ncount - jnp.where(ok, wcj, 0)
+    nfrac = state.nfrac - jnp.where(ok, wfj, 0.0)
+    return _maintain(state, state.centers, wcount, wfrac, state.kgram,
+                     ncount, nfrac, state.err_est + delta, j[None],
+                     jnp.int32(1))
 
 
 @jax.jit
@@ -192,7 +213,8 @@ def replace(state: StreamingRSKPCA, j, x) -> StreamingRSKPCA:
     kernel = state.kernel
     j = jnp.asarray(j, jnp.int32)
     x = jnp.asarray(x, jnp.float32)
-    w_j = state.weights[j]
+    wcj, wfj = state.wcount[j], state.wfrac[j]
+    w_j = wcj.astype(jnp.float32) + wfj
     n1 = state.n - w_j
     delta = (
         mmd_mod.weight_update_bound(state.n, n1, w_j, 0.0,
@@ -204,6 +226,9 @@ def replace(state: StreamingRSKPCA, j, x) -> StreamingRSKPCA:
     krow = krow.at[j].set(kernel.kappa)
     centers = state.centers.at[j].set(x)
     kgram = state.kgram.at[j, :].set(krow).at[:, j].set(krow)
-    weights = state.weights.at[j].set(1.0)
-    return _maintain(state, centers, weights, kgram, n1 + 1.0,
-                     state.err_est + delta, j[None])
+    wcount = state.wcount.at[j].set(1)
+    wfrac = state.wfrac.at[j].set(0.0)
+    ncount = state.ncount - wcj + 1
+    nfrac = state.nfrac - wfj
+    return _maintain(state, centers, wcount, wfrac, kgram, ncount, nfrac,
+                     state.err_est + delta, j[None], jnp.int32(1))

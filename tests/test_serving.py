@@ -1,0 +1,214 @@
+"""Continuous-batching front end: coalescing, scatter, SLO, hot-swap.
+
+Most tests drive the queue deterministically (``autostart=False`` +
+``step()``/``drain()``) against a stub server so they pin the dispatcher
+logic, not jax timing; the integration tests at the bottom run the real
+HotSwapServer and assert the recompile-free pow2-bucket contract.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import BatchingFrontEnd
+
+
+class StubServer:
+    """Deterministic 'transform': z[i] = (sum(x[i]), tag).  Records every
+    batch shape it was handed so tests can assert coalescing/padding."""
+
+    def __init__(self, tag=0.0):
+        self.tag = tag
+        self.calls = []
+
+    def transform(self, x):
+        x = np.asarray(x)
+        self.calls.append(x.shape)
+        return np.stack([x.sum(axis=1), np.full(x.shape[0], self.tag)], 1)
+
+
+def _expect(srv, x):
+    x = np.atleast_2d(np.asarray(x, np.float32))
+    return np.stack([x.sum(axis=1), np.full(x.shape[0], srv.tag)], 1)
+
+
+def test_step_coalesces_and_scatters_exactly():
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, max_batch=64, autostart=False)
+    rng = np.random.default_rng(0)
+    reqs = [rng.normal(size=(k, 3)).astype(np.float32) for k in (1, 4, 2)]
+    futs = [fe.submit(r) for r in reqs]
+    assert fe.step() == 7
+    # ONE fused call, padded to the pow2 bucket (7 -> 8 rows)
+    assert srv.calls == [(8, 3)]
+    for r, f in zip(reqs, futs):
+        np.testing.assert_allclose(f.result(timeout=0), _expect(srv, r))
+    assert fe.stats.batches == 1 and fe.stats.batched_rows == 7
+    assert fe.step() == 0  # queue drained
+
+
+def test_padding_rows_never_reach_callers():
+    srv = StubServer(tag=7.0)
+    fe = BatchingFrontEnd(srv, max_batch=32, autostart=False)
+    f = fe.submit(np.ones((5, 2), np.float32))
+    fe.step()
+    z = f.result(timeout=0)
+    assert z.shape == (5, 2)           # 3 padding rows sliced off
+    assert srv.calls == [(8, 2)]
+
+
+def test_max_batch_splits_fifo():
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, max_batch=8, autostart=False)
+    futs = [fe.submit(np.full((3, 2), i, np.float32)) for i in range(5)]
+    assert fe.drain() == 15
+    # whole requests only: 3+3 / 3+3 / 3 (never a split request)
+    assert [s[0] for s in srv.calls] == [8, 8, 4]
+    assert fe.stats.full_dispatches == 0  # 6 < 8: window closed, not full
+    for i, f in enumerate(futs):
+        np.testing.assert_allclose(f.result(timeout=0)[:, 0], 2.0 * i)
+
+
+def test_oversized_request_ships_alone():
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, max_batch=4, autostart=False)
+    big = fe.submit(np.ones((10, 2), np.float32))
+    small = fe.submit(np.ones((2, 2), np.float32))
+    assert fe.step() == 10 and fe.step() == 2
+    # the bucket rule clips at max_batch, so an oversized request is NOT
+    # padded (the server's transform chunks internally); the small one pads
+    # to its pow2 bucket
+    assert [s[0] for s in srv.calls] == [10, 2]
+    assert big.result(timeout=0).shape == (10, 2)
+    assert small.result(timeout=0).shape == (2, 2)
+
+
+def test_single_row_and_1d_submit():
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, autostart=False)
+    f = fe.submit(np.arange(3, dtype=np.float32))  # (d,) -> (1, d)
+    fe.step()
+    np.testing.assert_allclose(f.result(timeout=0), [[3.0, 0.0]])
+
+
+def test_transform_exception_propagates_to_every_future():
+    class Boom:
+        def transform(self, x):
+            raise RuntimeError("device fell over")
+
+    fe = BatchingFrontEnd(Boom(), autostart=False)
+    futs = [fe.submit(np.zeros((2, 2), np.float32)) for _ in range(3)]
+    fe.step()
+    for f in futs:
+        with pytest.raises(RuntimeError, match="fell over"):
+            f.result(timeout=0)
+
+
+def test_submit_after_close_raises():
+    fe = BatchingFrontEnd(StubServer(), autostart=False)
+    fe.close()
+    with pytest.raises(RuntimeError):
+        fe.submit(np.zeros((1, 2), np.float32))
+
+
+def test_close_drains_pending():
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, autostart=False)
+    f = fe.submit(np.ones((3, 2), np.float32))
+    fe.close()
+    assert f.result(timeout=0).shape == (3, 2)
+
+
+def test_hot_swap_between_batches_never_tears_one():
+    """A publish lands between dispatches: every request inside one batch
+    sees ONE operator version (the stub's tag), never a mix."""
+
+    class Swappable(StubServer):
+        pass
+
+    srv = Swappable(tag=1.0)
+    fe = BatchingFrontEnd(srv, autostart=False)
+    f1 = fe.submit(np.ones((2, 2), np.float32))
+    f2 = fe.submit(np.ones((2, 2), np.float32))
+    fe.step()
+    srv.tag = 2.0  # "publish": single attribute store, next batch sees it
+    f3 = fe.submit(np.ones((2, 2), np.float32))
+    fe.step()
+    assert set(f1.result(0)[:, 1]) == set(f2.result(0)[:, 1]) == {1.0}
+    assert set(f3.result(0)[:, 1]) == {2.0}
+
+
+def test_threaded_dispatcher_coalesces_under_load():
+    """With the dispatcher thread live and min_wait floored, concurrent
+    submitters coalesce into far fewer batches than requests, and every
+    result is still exact."""
+    srv = StubServer()
+    with BatchingFrontEnd(srv, max_batch=256, slo_ms=500.0,
+                          min_wait_ms=20.0) as fe:
+        results = {}
+
+        def client(i):
+            x = np.full((2, 3), float(i), np.float32)
+            results[i] = (x, fe.submit(x))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i, (x, f) in results.items():
+            np.testing.assert_allclose(f.result(timeout=5), _expect(srv, x))
+    assert fe.stats.requests == 16 and fe.stats.rows == 32
+    assert fe.stats.batches < 16          # coalescing actually happened
+    assert fe.stats.ewma_service_s        # EWMA learned at least one bucket
+
+
+def test_deadline_slack_bounds_the_wait():
+    """The coalescing window never extends past the oldest deadline's slack
+    minus the (pessimistic) service estimate."""
+    fe = BatchingFrontEnd(StubServer(), max_batch=64, slo_ms=100.0,
+                          min_wait_ms=10_000.0, autostart=False)
+    fe.stats.ewma_service_s[8] = 0.040    # 40ms estimate for this bucket
+    fe.submit(np.ones((5, 2), np.float32))
+    with fe._cond:
+        wait = fe._wait_s_locked(time.monotonic())
+    # slack = 100ms - 40ms*1.25 - 1ms = 49ms, far below the 10s min_wait
+    assert 0.0 < wait <= 0.050
+    # a full queue dispatches immediately no matter the window
+    fe.submit(np.ones((64, 2), np.float32))
+    with fe._cond:
+        assert fe._wait_s_locked(time.monotonic()) == 0.0
+    fe.close()
+
+
+def test_front_end_over_hot_swap_server_recompile_free():
+    """Integration: the real HotSwapServer behind the front end — pow2
+    bucket padding means a ragged request mix adds ZERO compiled shapes
+    after the buckets are warm, and batched answers match direct calls."""
+    from repro import streaming
+    from repro.core import gaussian
+    from repro.kernels import ops as kernel_ops
+    from repro.core.rsde import RSDE
+
+    rng = np.random.default_rng(4)
+    c = rng.normal(size=(40, 4)).astype(np.float32)
+    rsde = RSDE(c, np.ones(40, np.float64), n=40.0, scheme="test")
+    st_ = streaming.from_rsde(rsde, gaussian(1.0), 3, eps=0.5, cap=40)
+    srv = streaming.HotSwapServer(st_)
+
+    fe = BatchingFrontEnd(srv, max_batch=16, autostart=False)
+    for b in (1, 2, 4, 8, 16):           # warm every bucket
+        np.asarray(srv.transform(np.zeros((b, 4), np.float32)))
+    before = kernel_ops.projection_compile_count()
+
+    reqs = [rng.normal(size=(k, 4)).astype(np.float32)
+            for k in (3, 1, 5, 2, 7, 16, 4)]
+    futs = [fe.submit(r) for r in reqs]
+    fe.drain()
+    assert kernel_ops.projection_compile_count() == before
+    for r, f in zip(reqs, futs):
+        np.testing.assert_allclose(f.result(timeout=0),
+                                   np.asarray(srv.transform(r)),
+                                   rtol=1e-5, atol=1e-6)

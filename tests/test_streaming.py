@@ -1,6 +1,8 @@
 """Streaming RSKPCA (DESIGN.md §7): online insert/remove/replace vs
 from-scratch refits, the tracked Theorem-5.x error budget, recompile-free
 hot swap, drift-triggered refresh, and checkpoint roundtrip."""
+import dataclasses
+
 import numpy as np
 import pytest
 import jax
@@ -226,3 +228,43 @@ def test_streaming_mesh_transform_matches_single_device():
     srv = streaming.HotSwapServer(st)
     np.testing.assert_allclose(srv.transform(q, mesh=mesh), z0,
                                atol=1e-5, rtol=1e-4)
+
+
+def test_mass_counters_exact_past_f32_saturation():
+    """Regression (DESIGN.md §8 accounting fix): a single-f32 mass counter
+    freezes at n = 2^24 (f32 has a 24-bit mantissa, so 2^24 + 1 == 2^24 and
+    every later arrival silently vanishes from the normalization).  The
+    split int32-count + f32-residual accumulators must keep counting
+    exactly at any stream length."""
+    # the failure mode the split representation removes:
+    assert np.float32(2**24) + np.float32(1.0) == np.float32(2**24)
+    x, ker, st = _setup(budget=10.0, n=200)
+    st = dataclasses.replace(st, ncount=jnp.int32(1 << 24))
+    n0 = int(st.ncount)
+    xb = _blobs(64, seed=91, shift=0.5)
+    st2 = updates.ingest_batch(st, xb)
+    assert int(st2.ncount) - n0 == 64          # exact, not frozen
+    assert float(st2.n) == float(n0 + 64) + float(st2.nfrac)
+    # per-center weights ride the same split accumulators
+    st3 = updates.ingest_batch(
+        dataclasses.replace(st2, wcount=st2.wcount.at[0].set(1 << 24)),
+        xb)
+    assert int(st3.ncount) - n0 == 128
+
+
+def test_ragged_batch_patch_accounting_counts_real_rows():
+    """Regression: a masked (ragged-tail) ingest batch must add only its
+    REAL rows to ``n_patched`` — the old code added the padded batch size,
+    so ragged streams looked compaction-overdue after a few batches."""
+    x, ker, st = _setup(budget=10.0, n=200)  # budget huge => always patch
+    assert int(st.n_patched) == 0
+    xb = _blobs(8, seed=92, shift=0.5)
+    valid = np.zeros(8, bool)
+    valid[:3] = True                          # 3 real rows, 5 padding
+    st2 = updates.ingest_batch(st, xb, jnp.asarray(valid))
+    assert int(st2.n_patched) == 3            # was 8 before the fix
+    assert float(st2.n) - float(st.n) == 3.0  # padding adds no mass either
+    # and a fully-masked batch is a pure no-op on the accounting
+    st3 = updates.ingest_batch(st2, xb, jnp.zeros(8, bool))
+    assert int(st3.n_patched) == 3
+    assert float(st3.n) == float(st2.n)
