@@ -1,6 +1,7 @@
 PYTHONPATH := src
 
-.PHONY: test bench bench-smoke bench-shard bench-stream bench-serve
+.PHONY: test bench bench-smoke bench-shard bench-stream bench-serve \
+	bench-ingest bench-ingest-full
 
 # the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
@@ -37,3 +38,15 @@ bench-stream:
 # p99 at 2x saturation or a gated quantized tier is slower than bf16
 bench-serve:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --serve
+
+# out-of-core ingestion smoke (CI): end-to-end select->fit over the chunked
+# n=1M source on one device; appends a mode=ingest row to BENCH_rskpca.json
+# and fails on the rows/s floor or overlap_fraction < 0.5
+bench-ingest:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --ingest
+
+# the non-CI full point: n=10M rows, m budget 32768, chunk rows sharded over
+# an 8-host-device mesh (several minutes); additionally gates peak host RSS
+# growth < 25% of the dataset's 640MB f32 footprint
+bench-ingest-full:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --ingest --full

@@ -5,6 +5,7 @@ carries the figure-specific metric(s) as ``key=value|key=value``.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -20,6 +21,91 @@ def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw):
         fn(*args, **kw)
         times.append((time.perf_counter() - t0) * 1e6)
     return float(np.median(times))
+
+
+def timeit_stream(make_input, fn, repeat: int = 1, warmup: int = 1):
+    """Median wall time (us) of ``fn(make_input())`` — the generator-input
+    path for out-of-core benchmarks.
+
+    ``timeit`` assumes its argument array is already resident; an ingest
+    bench must NOT pre-materialize n=10M rows just to time the pipeline, so
+    here every (warmup and timed) call receives a FRESH lazily-producing
+    source from ``make_input()`` and the production cost is — deliberately —
+    inside the timed region: feeding the pipeline IS the workload.
+    """
+    for _ in range(warmup):
+        fn(make_input())
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(make_input())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _rss_bytes() -> int:
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmRSS:"):
+                return int(line.split()[1]) * 1024
+    return 0
+
+
+def _live_bytes() -> int:
+    import jax
+
+    return sum(a.nbytes for a in jax.live_arrays())
+
+
+class RssSampler:
+    """Peak memory of a measured region: live buffer bytes + host-RSS growth.
+
+    A daemon thread samples two numbers and records the peak of each:
+
+    * ``peak_live`` — total bytes of live jax arrays (``jax.live_arrays``).
+      On the CPU backend device buffers ARE host memory, so this is the
+      memory the pipeline actually holds resident — the number the
+      out-of-core gate reads (a materialized n=10M dataset would show up
+      here as a single 640MB array).
+    * ``peak_delta`` — peak VmRSS growth over the ``start()`` baseline
+      (the delta, not ``ru_maxrss``: the interpreter + XLA baseline is
+      hundreds of MB).  Informational: on CPU it also counts XLA's
+      per-execution scratch high-water — interpret-mode Pallas workspace
+      that lives in device HBM on real hardware — which plateaus at a
+      shape-dependent constant unrelated to n.  Start AFTER warmup so
+      one-time compile arenas don't count against the pipeline.
+    """
+
+    def __init__(self, interval_s: float = 0.01):
+        self._interval = interval_s
+        self._stop = threading.Event()
+        self._base = 0
+        self.peak_delta = 0
+        self.peak_live = 0
+        self._t: threading.Thread | None = None
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.peak_delta = max(self.peak_delta, _rss_bytes() - self._base)
+            self.peak_live = max(self.peak_live, _live_bytes())
+            self._stop.wait(self._interval)
+
+    def start(self) -> "RssSampler":
+        self._base = _rss_bytes()
+        self.peak_delta = 0
+        self.peak_live = 0
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+        return self
+
+    def stop(self) -> int:
+        """Returns the peak RSS growth (bytes) since ``start``; the peak
+        live-buffer bytes are left in ``self.peak_live``."""
+        self._stop.set()
+        if self._t is not None:
+            self._t.join()
+        self.peak_delta = max(self.peak_delta, _rss_bytes() - self._base)
+        return self.peak_delta
 
 
 def emit(name: str, us_per_call: float, **derived):

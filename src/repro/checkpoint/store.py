@@ -7,7 +7,7 @@ Layout:
                              "<leaf_idx>/<shard_idx>" with index metadata
     <dir>/LATEST             published last -> restart never sees a torn ckpt
 
-Fault-tolerance contract (DESIGN.md §9):
+Fault-tolerance contract (DESIGN.md §11):
   * atomic publish: write into step_<N>.tmp, fsync, rename, then update LATEST;
   * restore is sharding-agnostic: leaves are reassembled on the host and
     re-placed under ANY target mesh/sharding -> elastic restarts onto a

@@ -4,7 +4,7 @@
 expert d_ff=2048 (+1 shared expert), first layer dense (d_ff=18432,
 DeepSeek-V3-style).  [arXiv:2501.kimi2; unverified]
 head_dim 128 (7168/64=112 rounded to the MXU-aligned 128, as in DSv3).
-Memory adaptation for a 256-chip v5e pod (DESIGN.md §12): bf16 params +
+Memory adaptation for a 256-chip v5e pod (DESIGN.md §14): bf16 params +
 Adafactor (factored second moment) — f32 AdamW for 1T params needs 12 TB,
 a v5e pod has 4 TB HBM.  Full attention -> long_500k SKIP.
 """

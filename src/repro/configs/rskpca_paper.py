@@ -1,6 +1,6 @@
 """The paper's own experiment configuration (Tables 1-2, Figs. 2-8).
 
-Datasets are synthetic stand-ins matched on (n, dim, classes) — DESIGN.md §11.
+Datasets are synthetic stand-ins matched on (n, dim, classes) — DESIGN.md §14.
 ``ell_grid`` is the paper's sweep [3.0, 5.0] in 0.1 steps; ``rank`` r=5 for
 the eigenembedding experiments; k-nn k per dataset from Table 1.
 """

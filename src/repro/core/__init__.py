@@ -7,7 +7,7 @@ from repro.core.kernels_math import (  # noqa: F401
     pairwise_sq_dists, kde, rsde_eval,
 )
 from repro.core.shadow import (  # noqa: F401
-    shadow_select, shadow_select_np, shadow_select_host,
+    StreamingMerge, shadow_select, shadow_select_np, shadow_select_host,
     shadow_select_blocked, shadow_select_streaming, two_level_merge,
 )
 from repro.core.rsde import (  # noqa: F401
@@ -17,7 +17,10 @@ from repro.core.rskpca import (  # noqa: F401
     KPCAModel, fit, fit_rskpca, fit_kpca, fit_subsampled_kpca,
     embedding_alignment_error, eigenvalue_error,
 )
-from repro.core.pipeline import fit_shadow_fused  # noqa: F401
+from repro.core.pipeline import fit_centers, fit_shadow_fused  # noqa: F401
+from repro.core.ingest_pipeline import (  # noqa: F401
+    IngestStats, ingest_fit, pad_block, select_streaming,
+)
 from repro.core.nystrom import fit_nystrom, fit_weighted_nystrom  # noqa: F401
 from repro.core import mmd  # noqa: F401
 from repro.core.mmd import (  # noqa: F401

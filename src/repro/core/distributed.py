@@ -71,6 +71,33 @@ def _two_level_select(x: Array, valid: Array, eps: Array, mesh: Mesh,
     return out_c, out_w, m
 
 
+@partial(jax.jit, static_argnames=("mesh", "axis", "block"))
+def _chunk_select_sharded(xp: Array, valid: Array, eps2: Array, mesh: Mesh,
+                          axis: str, block: int):
+    """Level-1 BLOCKED selection on one ingest chunk, rows sharded over
+    ``axis`` — the per-chunk device step of the out-of-core pipeline
+    (core/ingest_pipeline.py, DESIGN.md §9).
+
+    Unlike ``_two_level_select`` this neither all-gathers nor merges: each
+    device runs the fused blocked-selection while_loop on its local rows and
+    the padded per-device (c, w) buffers come back still row-sharded (only
+    selected rows carry weight; the host-side ``StreamingMerge`` is the
+    level 2, shared across every chunk of the stream).  An all-invalid shard
+    (ragged final chunk confined to few devices) exits its loop immediately
+    with zero survivors — zero-weight rows are the merge's padding contract.
+    """
+
+    def level1(x_loc, v_loc):
+        _, c, w, _, _ = shadow_mod._blocked_select_device(
+            x_loc, eps2, block, v_loc, jnp.asarray(0, jnp.int32))
+        return c, w
+
+    return shard_map(
+        level1, mesh=mesh, in_specs=(P(axis, None), P(axis)),
+        out_specs=(P(axis, None), P(axis)), check_vma=False,
+    )(xp, valid)
+
+
 def distributed_shadow_rsde(x, kernel: Kernel, ell: float, mesh: Mesh,
                             axis: str = "data",
                             max_local: int | None = None,

@@ -1,0 +1,259 @@
+"""Out-of-core distributed ingestion: select -> fit at n = 10M+ (DESIGN.md §9).
+
+The paper's Algorithm 2 is what makes huge-n KPCA *possible* (m ~ eps-cover
+size, not n), but the seed implementations still assumed the (n, d) array was
+resident.  This pipeline removes that assumption end to end:
+
+  * the data source yields fixed-shape HOST chunks (only one-in-flight plus a
+    prefetch window ever exists — peak host memory is O(chunk * depth), not
+    O(n));
+  * a producer thread generates the next chunk and stages it onto the
+    device(s) (``jax.device_put``) while the consumer runs blocked selection
+    on the current one — the async double-buffered feed.  ``IngestStats``
+    records the measured copy/compute overlap fraction;
+  * per chunk, selection runs the fused ``_blocked_select_device`` rounds —
+    on a mesh, per device shard via ``distributed._chunk_select_sharded`` —
+    and the resulting candidate centers fold into a ``StreamingMerge``
+    (weight-exact, center-budget spill; cover radius 2*eps, so the §5 bounds
+    hold with ell -> ell/2);
+  * the merged center set feeds Algorithm 1 directly (``pipeline.fit_centers``
+    single-device, ``fit_rskpca_sharded`` via ``fit_rskpca(mesh=...)``) — the
+    dataset is touched exactly once.
+
+This module deliberately takes ANY chunk source (``.chunks()`` method or a
+bare iterable of ``(x, n_valid)``) so it never imports ``repro.data``; the
+deterministic synthetic source lives in ``data.kpca_datasets.ChunkedDataset``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import shadow as shadow_mod
+from repro.core.rsde import RSDE
+from repro.core.shadow import StreamingMerge
+
+Array = jax.Array
+
+
+def pad_block(x, rows: int):
+    """Zero-pad a ragged (k, d) host block to fixed (rows, d) + valid mask.
+
+    The fixed-shape contract shared by streaming ingest batches and ingest
+    chunks: padding rows are masked (never selected, never counted), so one
+    compiled program serves every block of a ragged stream.
+    """
+    x = np.asarray(x, np.float32)
+    k = x.shape[0]
+    if k == rows:
+        return x, np.ones((rows,), bool)
+    assert k < rows, f"block of {k} rows exceeds the fixed size {rows}"
+    xp = np.zeros((rows, x.shape[1]), np.float32)
+    xp[:k] = x
+    ok = np.zeros((rows,), bool)
+    ok[:k] = True
+    return xp, ok
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Measured pipeline counters (the numbers BENCH_rskpca.json records).
+
+    ``feed_s`` is producer busy time (host chunk generation + device staging);
+    ``stall_s`` is consumer time blocked waiting on the feed queue.  When the
+    feed hides fully behind selection compute, stall collapses to the
+    pipeline-fill latency of the first chunk and ``overlap_fraction`` -> 1;
+    a transfer-bound pipeline drives it toward 0.
+    """
+    chunks: int = 0
+    rows: int = 0
+    m: int = 0
+    feed_s: float = 0.0
+    stall_s: float = 0.0
+    compute_s: float = 0.0
+    select_s: float = 0.0     # select+merge wall (includes stalls)
+    fit_s: float = 0.0
+    wall_s: float = 0.0       # end-to-end select -> fit
+    spilled: int = 0
+    max_spill_dist: float = 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of feed work hidden behind selection compute."""
+        if self.feed_s <= 0:
+            return 1.0
+        return float(np.clip((self.feed_s - self.stall_s) / self.feed_s,
+                             0.0, 1.0))
+
+    @property
+    def rows_per_s(self) -> float:
+        wall = self.wall_s or self.select_s
+        return self.rows / wall if wall > 0 else 0.0
+
+
+_END = object()
+
+
+class _PrefetchFeed:
+    """Producer-thread double buffer: generate + stage chunk i+1 while the
+    consumer computes on chunk i.
+
+    The queue holds at most ``depth - 1`` staged chunks (plus the one the
+    producer is building), bounding host memory at ``depth`` chunks.  The
+    producer's busy time accrues to ``feed_s`` (queue blocking excluded — a
+    full queue means the feed is AHEAD, not working); consumer blocking on
+    ``get`` accrues to ``stall_s``.  Producer exceptions re-raise at the
+    consumer's next pull, so a failing source can't hang the pipeline.
+    """
+
+    def __init__(self, it, place, stats: IngestStats, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth - 1))
+        self._stats = stats
+        self._err: BaseException | None = None
+        self._t = threading.Thread(
+            target=self._run, args=(iter(it), place), daemon=True)
+        self._t.start()
+
+    def _run(self, it, place):
+        try:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    item = next(it)
+                except StopIteration:
+                    break
+                staged = place(*item)
+                self._stats.feed_s += time.perf_counter() - t0
+                self._q.put(staged)
+        except BaseException as e:  # re-raised on the consumer side
+            self._err = e
+        finally:
+            self._q.put(_END)
+
+    def __iter__(self):
+        while True:
+            t0 = time.perf_counter()
+            item = self._q.get()
+            self._stats.stall_s += time.perf_counter() - t0
+            if item is _END:
+                self._t.join()
+                if self._err is not None:
+                    raise self._err
+                return
+            yield item
+
+
+def _chunk_iter(source):
+    """``.chunks()`` protocol or a bare iterable of (x, n_valid)."""
+    return source.chunks() if hasattr(source, "chunks") else iter(source)
+
+
+def select_streaming(source, eps: float, *, block: int = 256,
+                     budget: int | None = None, mesh=None,
+                     axis: str = "data", prefetch: int = 2):
+    """Distributed out-of-core shadow selection over a chunk stream.
+
+    Args:
+      source: ``.chunks()`` object (e.g. ``data.ChunkedDataset``) or an
+        iterable of ``(x (chunk, d) f32, n_valid)`` fixed-shape host chunks.
+      eps: shadow radius sigma/ell.
+      block: candidate batch size of the blocked selector.
+      budget: cap on merged centers (over-budget mass spills weight-exactly
+        to the nearest retained center; see ``StreamingMerge``).
+      mesh: optional device mesh — each chunk's rows shard over ``axis`` and
+        every device runs selection on its local rows; chunk size must then
+        divide the axis size.
+      prefetch: feed depth (chunks of host memory the pipeline may hold).
+
+    Returns ``(RSDE(scheme="shadow-ingest"), IngestStats)``.  Weights are
+    float64 and sum EXACTLY to the number of ingested rows; cover radius is
+    2*eps like every two-level path.
+    """
+    stats = IngestStats()
+    t_start = time.perf_counter()
+    eps2 = jnp.float32(eps) ** 2
+    stop0 = jnp.asarray(0, jnp.int32)
+    ndev = 1 if mesh is None else mesh.shape[axis]
+    if mesh is not None:
+        x_shard = NamedSharding(mesh, P(axis, None))
+        v_shard = NamedSharding(mesh, P(axis))
+
+        def place(x, n_valid):
+            assert x.shape[0] % ndev == 0, \
+                f"chunk {x.shape[0]} must divide the '{axis}' axis ({ndev})"
+            ok = np.arange(x.shape[0]) < n_valid
+            return (jax.device_put(x, x_shard),
+                    jax.device_put(ok, v_shard), int(n_valid))
+    else:
+        def place(x, n_valid):
+            ok = np.arange(x.shape[0]) < n_valid
+            return jax.device_put(x), jax.device_put(ok), int(n_valid)
+
+    merge: StreamingMerge | None = None
+    for xd, okd, n_valid in _PrefetchFeed(_chunk_iter(source), place, stats,
+                                          depth=prefetch):
+        t0 = time.perf_counter()
+        if merge is None:
+            merge = StreamingMerge(xd.shape[1], eps, budget=budget,
+                                   block=block)
+        b = max(1, min(block, xd.shape[0] // ndev))
+        if mesh is not None:
+            from repro.core.distributed import _chunk_select_sharded
+            c, w = _chunk_select_sharded(xd, okd, eps2, mesh, axis, b)
+        else:
+            _, c, w, _, _ = shadow_mod._blocked_select_device(
+                xd, eps2, b, okd, stop0)
+        # np.asarray blocks until the device round finishes — compute_s is
+        # true select+merge time, which is what overlap compares feed_s to
+        merge.update(np.asarray(c), np.asarray(w))
+        stats.chunks += 1
+        stats.rows += n_valid
+        stats.compute_s += time.perf_counter() - t0
+    if merge is None:
+        raise ValueError("empty source: no chunks to ingest")
+    stats.select_s = time.perf_counter() - t_start
+    stats.m = merge.m
+    stats.spilled = merge.spilled
+    stats.max_spill_dist = merge.max_spill_dist
+    rsde = RSDE(centers=merge.centers, weights=merge.weights, n=stats.rows,
+                assign=None, scheme="shadow-ingest")
+    return rsde, stats
+
+
+def ingest_fit(source, kernel, rank: int, *, ell: float = 4.0,
+               block: int = 256, budget: int | None = None, mesh=None,
+               axis: str = "data", prefetch: int = 2,
+               matfree: bool | None = None):
+    """Single-pass out-of-core select -> fit: the n=10M front door.
+
+    Streams ``source`` through ``select_streaming`` (eps = sigma/ell via
+    ``kernel.epsilon``), then fits Algorithm 1 on the merged centers —
+    ``pipeline.fit_centers`` on one device, the sharded/matrix-free fit when
+    ``mesh`` is given.  Returns ``(KPCAModel, IngestStats)``; the dataset is
+    generated, staged, and read exactly once.
+    """
+    from repro.core.pipeline import fit_centers
+    from repro.core.rskpca import fit_rskpca
+
+    t0 = time.perf_counter()
+    rsde, stats = select_streaming(
+        source, kernel.epsilon(ell), block=block, budget=budget, mesh=mesh,
+        axis=axis, prefetch=prefetch)
+    t1 = time.perf_counter()
+    if mesh is None:
+        model = fit_centers(rsde.centers, rsde.weights, rsde.n, kernel, rank,
+                            matfree=matfree, method="rskpca+shadow-ingest")
+    else:
+        model = fit_rskpca(rsde, kernel, rank, mesh=mesh, axis=axis,
+                           matfree=matfree)
+        model = dataclasses.replace(model, method="rskpca+shadow-ingest")
+    stats.fit_s = time.perf_counter() - t1
+    stats.wall_s = time.perf_counter() - t0
+    return model, stats

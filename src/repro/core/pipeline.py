@@ -39,6 +39,47 @@ from repro.core.shadow import _pow2_ceil
 from repro.core.rskpca import KPCAModel, _fit_rskpca_device, _use_matfree
 
 
+def fit_centers(centers, weights, n: int, kernel: Kernel, rank: int, *,
+                m: int | None = None, matfree: bool | None = None,
+                method: str = "rskpca") -> KPCAModel:
+    """Capacity-bucketed Algorithm 1 fit of a selected center set — the
+    shared fit tail of the fused (``fit_shadow_fused``) and out-of-core
+    (``ingest_pipeline.ingest_fit``) pipelines.
+
+    ``centers``/``weights`` may be a device buffer with ``m`` live rows (the
+    fused selector's preallocated (n, d) output, sliced here without a host
+    round-trip) or an exact host (m, d) set (the streaming merge's).  Either
+    way they are sliced/zero-padded to the power-of-two capacity bucket —
+    zero-weight rows contribute zero K-tilde rows/columns and zero projector
+    rows — so re-jit count stays logarithmic across m.  The cap slices are
+    donated into the jitted device fit; ``matfree=None`` consults the
+    bytes-budget crossover (above it no m x m buffer ever materializes).
+    """
+    c = jnp.asarray(centers, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    m = c.shape[0] if m is None else int(m)
+    rank = min(rank, m)
+    cap = min(max(c.shape[0], 128), _pow2_ceil(max(m, 128)))
+    # materialize the model's center rows BEFORE the fit: the cap slices are
+    # donated into it, and when cap == c.shape[0] jax's full-slice fast path
+    # returns `c` ITSELF — reading it after donation would hit a deleted array
+    centers_host = np.asarray(c[:m], np.float32)
+    if c.shape[0] < cap:  # host center sets arrive exactly (m, d): pad
+        c = jnp.concatenate(
+            [c, jnp.zeros((cap - c.shape[0], c.shape[1]), jnp.float32)])
+        w = jnp.concatenate([w, jnp.zeros((cap - w.shape[0],), jnp.float32)])
+    use_mf = _use_matfree(kernel, cap, rank, matfree)
+    lam, proj = _fit_rskpca_device(c[:cap], w[:cap], jnp.float32(n), kernel,
+                                   rank, matfree=use_mf)
+    return KPCAModel(
+        kernel=kernel,
+        centers=centers_host,
+        projector=np.asarray(proj[:m]),
+        eigvals=np.asarray(lam),
+        method=method,
+    )
+
+
 def fit_shadow_fused(x, kernel: Kernel, rank: int, *, ell: float,
                      block: int | None = None,
                      matfree: bool | None = None) -> KPCAModel:
@@ -57,21 +98,5 @@ def fit_shadow_fused(x, kernel: Kernel, rank: int, *, ell: float,
     _, centers, weights, _, m_dev = shadow_mod._blocked_select_device(
         xf, eps2, b, jnp.ones((n,), bool), jnp.asarray(0, jnp.int32))
     m = int(m_dev)  # the pipeline's single host sync: one scalar
-    rank = min(rank, m)
-    cap = min(n, _pow2_ceil(max(m, 128)))
-    # materialize the model's center rows BEFORE the fit: the cap slices are
-    # donated into it, and when cap == n jax's full-slice fast path returns
-    # `centers` ITSELF — reading it after donation would hit a deleted array
-    centers_host = np.asarray(centers[:m], np.float32)
-    c_cap = centers[:cap]
-    w_cap = weights[:cap]
-    use_mf = _use_matfree(kernel, cap, rank, matfree)
-    lam, proj = _fit_rskpca_device(c_cap, w_cap, jnp.float32(n), kernel,
-                                   rank, matfree=use_mf)
-    return KPCAModel(
-        kernel=kernel,
-        centers=centers_host,
-        projector=np.asarray(proj[:m]),
-        eigvals=np.asarray(lam),
-        method="rskpca+shadow-fused",
-    )
+    return fit_centers(centers, weights, n, kernel, rank, m=m,
+                       matfree=matfree, method="rskpca+shadow-fused")

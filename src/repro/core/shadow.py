@@ -12,8 +12,13 @@ Implementations (DESIGN.md §3):
     up to B mutually-eps-separated candidates and absorbs all their shadows
     in ONE Pallas assignment pass, cutting sequential depth from m to ~m/B.
   * ``shadow_select_streaming`` — two-level path for data that doesn't fit in
-    device memory: per-chunk blocked selection + ``two_level_merge`` (cover
-    radius degrades to 2*eps; the §5 bounds hold with ell -> ell/2).
+    device memory: per-chunk blocked selection + a ``StreamingMerge`` fold
+    (cover radius degrades to 2*eps; the §5 bounds hold with ell -> ell/2).
+  * ``StreamingMerge``     — weight-exact streaming reconciliation of
+    candidate-center batches (the level-2 merge of the out-of-core ingest
+    pipeline, core/ingest_pipeline.py), with center-budget spill handling;
+    ``two_level_merge`` remains the one-shot replicated-merge variant the
+    sharded selector uses.
 
 Invariants (property-tested in tests/test_shadow.py):
   * every data point lies strictly within eps of its assigned center;
@@ -125,13 +130,16 @@ def shadow_select_host(x, eps: float):
 
 @partial(jax.jit, static_argnames=("block",))
 def _blocked_select_device(xf: Array, eps2: Array, block: int,
-                           alive0: Array, stop_count: Array):
+                           alive0: Array, stop_count: Array, w0=None):
     """Blocked-selection rounds fused in ONE device while_loop, running
     until the alive set drops to ``stop_count`` (0 = exhaust it).
 
     ``alive0`` lets the caller mark padding rows dead up front (the
     compaction cascade in ``shadow_select_blocked`` pads the shrunken alive
-    set to a power of two so re-jits stay bounded).
+    set to a power of two so re-jits stay bounded).  ``w0`` (optional (n,)
+    f32) gives each point a MASS instead of unit count — the streaming
+    merge runs selection over weighted candidate centers, and a keeper's
+    weight is then the sum of absorbed masses rather than a point count.
 
     Per round (the old per-round host loop paid a host sync + numpy
     conversion per round — fusing the loop cut n=32k selection ~2x):
@@ -181,8 +189,9 @@ def _blocked_select_device(xf: Array, eps2: Array, block: int,
             jnp.argmin(d2c_kept, axis=0).astype(idx.dtype))
         d2min = d2min.at[cand_idx].set(jnp.min(d2c_kept, axis=0))
         absorbed = alive & (d2min < eps2)
-        counts = jnp.zeros((block,), jnp.float32).at[idx].add(
-            jnp.where(absorbed, 1.0, 0.0))
+        mass = jnp.where(absorbed, 1.0, 0.0) if w0 is None \
+            else jnp.where(absorbed, w0, 0.0)
+        counts = jnp.zeros((block,), jnp.float32).at[idx].add(mass)
         kept_rank = jnp.cumsum(keep) - 1                   # rank among kept
         return cand, keep, counts, idx, absorbed, kept_rank
 
@@ -217,7 +226,8 @@ def _pow2_ceil(v: int) -> int:
     return 1 << max(v - 1, 0).bit_length()
 
 
-def shadow_select_blocked(x, eps: float, block: int | None = None):
+def shadow_select_blocked(x, eps: float, block: int | None = None,
+                          weights=None):
     """Blocked Algorithm 2: ~m/B sequential rounds instead of m iterations,
     fused in device while_loops (no per-round host sync).
 
@@ -234,6 +244,12 @@ def shadow_select_blocked(x, eps: float, block: int | None = None):
     invariants hold: strict eps-cover, weights partition n, centers pairwise
     >= eps apart (a later-phase candidate was, by construction, never within
     eps of any earlier keeper).
+
+    ``weights`` (optional (n,) masses) runs the WEIGHTED variant the
+    streaming merge needs: each input point carries a mass and a keeper's
+    output weight is the sum of absorbed masses (== point count when every
+    mass is 1).  Output weights then partition ``sum(weights)`` instead
+    of ``n``.
     """
     x_np = np.asarray(x, np.float32)
     n = x_np.shape[0]
@@ -245,12 +261,14 @@ def shadow_select_blocked(x, eps: float, block: int | None = None):
     cur_x = x_np                    # padded working set
     cur_orig = np.arange(n)         # padded-row -> original-row map
     cur_alive = np.ones((n,), bool)
+    cur_w = None if weights is None else np.asarray(weights, np.float32)
     while cur_alive.any():
         b = max(1, min(block, cur_x.shape[0]))
         n_alive = int(cur_alive.sum())
         alive, c, w, a, mm = _blocked_select_device(
             jnp.asarray(cur_x), eps2, b, jnp.asarray(cur_alive),
-            jnp.asarray(n_alive // 2, jnp.int32))
+            jnp.asarray(n_alive // 2, jnp.int32),
+            None if cur_w is None else jnp.asarray(cur_w))
         mm = int(mm)
         a = np.asarray(a)
         absorbed = a >= 0
@@ -272,45 +290,148 @@ def shadow_select_blocked(x, eps: float, block: int | None = None):
         cur_orig = nxt_orig
         cur_alive = np.zeros((npad,), bool)
         cur_alive[: still.size] = True
+        if cur_w is not None:
+            nxt_w = np.zeros((npad,), np.float32)
+            nxt_w[: still.size] = cur_w[still]
+            cur_w = nxt_w
     return (np.concatenate(centers_out),
             np.concatenate(weights_out).astype(np.float64),
             assign, m)
 
 
+class StreamingMerge:
+    """Weight-exact streaming extension of ``two_level_merge`` (DESIGN.md
+    §9): reconcile candidate-center batches ONE BATCH AT A TIME instead of
+    requiring every level-1 center in memory at once.
+
+    Per ``update(cand_c, cand_w)``:
+
+    1. **Absorb** — one assignment pass of the candidates against the
+       current merged set; any candidate strictly within eps of a merged
+       center hands its mass to that center.  Duplicate centers across
+       chunk/shard boundaries land here (d2 == 0 < eps^2), so they merge
+       instead of accumulating.
+    2. **Select** — survivors (all >= eps from every merged center) run
+       WEIGHTED blocked selection among themselves, restoring pairwise
+       eps-separation; the kept centers append to the merged set.
+    3. **Spill** — if appending would exceed ``budget`` centers, the
+       over-budget keepers are instead absorbed into their nearest
+       retained center (merged set + kept prefix) regardless of distance;
+       ``spilled``/``max_spill_dist`` record how much cover quality the
+       budget cost.
+
+    Mass bookkeeping is float64 on host, so for integer point masses the
+    invariant ``weights.sum() == total ingested mass`` holds EXACTLY up to
+    2^53 (the one-shot device merge is only exact to f32's 2^24).  Cover
+    radius of the merged set is 2*eps (triangle inequality), exactly like
+    ``two_level_merge`` — the §5 bounds hold with ell -> ell/2.
+    """
+
+    def __init__(self, d: int, eps: float, budget: int | None = None,
+                 block: int | None = 256):
+        self.d = int(d)
+        self.eps = float(eps)
+        self.budget = None if budget is None else int(budget)
+        self.block = 256 if block is None else int(block)
+        self._c = np.zeros((0, self.d), np.float32)
+        self._w = np.zeros((0,), np.float64)
+        self.spilled = 0
+        self.max_spill_dist = 0.0
+
+    @property
+    def m(self) -> int:
+        return self._c.shape[0]
+
+    @property
+    def centers(self) -> np.ndarray:
+        return self._c
+
+    @property
+    def weights(self) -> np.ndarray:
+        return self._w
+
+    def _absorb_into(self, target_c, target_w, cand_c, cand_w, spill: bool):
+        """Assign candidates to nearest target center; within-eps (or ALL,
+        when ``spill``) hand over their mass.  Returns the survivor mask."""
+        idx, d2 = kernel_ops.shadow_assign(cand_c, target_c, tag="ingest")
+        idx, d2 = np.asarray(idx), np.asarray(d2)
+        hit = np.ones_like(idx, dtype=bool) if spill \
+            else d2 < np.float32(self.eps) ** 2
+        np.add.at(target_w, idx[hit], cand_w[hit])
+        if spill and hit.any():
+            self.spilled += int(hit.sum())
+            self.max_spill_dist = max(self.max_spill_dist,
+                                      float(np.sqrt(d2[hit].max())))
+        return ~hit
+
+    def update(self, cand_c, cand_w) -> None:
+        """Fold one batch of candidate centers (zero-weight rows are
+        padding and ignored) into the merged set."""
+        cand_c = np.asarray(cand_c, np.float32)
+        cand_w = np.asarray(cand_w, np.float64)
+        live = cand_w > 0
+        cand_c, cand_w = cand_c[live], cand_w[live]
+        if cand_c.shape[0] == 0:          # empty shard / all-padding batch
+            return
+        if self.m:
+            keep = self._absorb_into(self._c, self._w, cand_c, cand_w,
+                                     spill=False)
+            cand_c, cand_w = cand_c[keep], cand_w[keep]
+            if cand_c.shape[0] == 0:
+                return
+        c_new, w_new, _, m_new = shadow_select_blocked(
+            cand_c, self.eps, block=self.block, weights=cand_w)
+        room = m_new if self.budget is None else max(0, self.budget - self.m)
+        kept = min(m_new, room)
+        kept_c = np.asarray(c_new[:kept], np.float32)
+        kept_w = np.asarray(w_new[:kept], np.float64)
+        if kept < m_new:                  # center-budget spill
+            target_c = np.concatenate([self._c, kept_c]) if self.m else kept_c
+            target_w = np.concatenate([self._w, kept_w]) if self.m else kept_w
+            if target_c.shape[0] == 0:
+                raise ValueError("center budget is 0: nowhere to spill")
+            self._absorb_into(target_c, target_w, c_new[kept:], w_new[kept:],
+                              spill=True)
+            self._c, self._w = target_c, target_w
+        else:
+            self._c = np.concatenate([self._c, kept_c]) if self.m else kept_c
+            self._w = np.concatenate([self._w, kept_w]) if self.m else kept_w
+
+
 def shadow_select_streaming(x, eps: float, chunk: int = 8192,
-                            block: int = 256):
+                            block: int = 256, budget: int | None = None):
     """Two-level streaming selection for out-of-memory datasets.
 
     Level 1 runs blocked selection per fixed-size chunk (only one chunk is
-    device-resident at a time); level 2 merges the chunk centers with
-    ``two_level_merge``.  Cover radius is 2*eps (triangle inequality), i.e.
-    the §5 bounds hold with ell -> ell/2; the final assign map is recovered
-    with one Pallas assignment pass per chunk.
+    device-resident at a time); level 2 folds each chunk's centers into a
+    ``StreamingMerge`` — the merged set is the ONLY cross-chunk state, so
+    peak memory is O(chunk + m) however large n grows.  Cover radius is
+    2*eps (triangle inequality), i.e. the §5 bounds hold with ell -> ell/2;
+    the final assign map is recovered with one Pallas assignment pass per
+    chunk.  ``budget`` caps the merged center count (over-budget candidates
+    spill weight-exactly into their nearest retained center).
 
     Returns (centers, weights, assign, m).  Unlike the one-level selectors,
     ``weights`` are the MERGED level-1 shadow masses while ``assign`` maps
     each point to its NEAREST merged center, so ``bincount(assign)`` need
     not equal ``weights`` — both are valid 2*eps quantizations, they just
     answer different questions (density mass vs. nearest-cover membership).
+    ``weights.sum() == n`` holds exactly (float64 mass bookkeeping).
     """
     x = np.asarray(x, np.float32)
     n = x.shape[0]
-    cs, ws = [], []
+    merge = StreamingMerge(x.shape[1], eps, budget=budget, block=block)
     for s in range(0, n, chunk):
         c, w, _, _ = shadow_select_blocked(x[s : s + chunk], eps, block=block)
-        cs.append(c)
-        ws.append(w)
-    all_c = jnp.asarray(np.concatenate(cs), jnp.float32)
-    all_w = jnp.asarray(np.concatenate(ws), jnp.float32)
-    out_c, out_w, m = two_level_merge(all_c, all_w, jnp.float32(eps),
-                                      max_centers=all_c.shape[0])
-    m = int(m)
-    centers = np.asarray(out_c[:m])
+        merge.update(c, w)
+    m = merge.m
+    centers = merge.centers
     assign = np.empty((n,), np.int64)
     for s in range(0, n, chunk):
-        idx, _ = kernel_ops.shadow_assign(x[s : s + chunk], centers)
+        idx, _ = kernel_ops.shadow_assign(x[s : s + chunk], centers,
+                                          tag="ingest")
         assign[s : s + chunk] = np.asarray(idx)
-    return centers, np.asarray(out_w[:m], np.float64), assign, m
+    return centers, merge.weights, assign, m
 
 
 def two_level_merge(centers: Array, weights: Array, eps: Array,

@@ -7,7 +7,7 @@ within-cluster spread small relative to the kernel bandwidth, so that the
 ShDE retains <~10-30% of the data for ell in [3, 5] exactly as in Fig. 6.
 
 Bandwidths are re-derived with the median-distance heuristic (the paper used
-cross-validation on the real data; DESIGN.md §12 records this changed
+cross-validation on the real data; DESIGN.md §14 records this changed
 assumption).  All claims validated against the paper are therefore the
 *relative* ones: speedup ratios, method orderings, convergence in ell.
 """
@@ -76,6 +76,116 @@ def make_dataset(name: str, seed: int = 0, n: int | None = None):
         y = np.where(flip, rng.integers(0, spec.classes, size=n), y)
     sigma = median_sigma(x, seed=seed)
     return x.astype(np.float32), y.astype(np.int32), sigma
+
+
+#: Row-generation granule of ``ChunkedDataset``: row i is always produced by
+#: tile i // _TILE from its own counter-derived seed, so chunk size (and even
+#: the requested n) never changes a row's value.
+_TILE = 4096
+
+
+class ChunkedDataset:
+    """Deterministic out-of-core chunk stream over the synthetic mixtures
+    (DESIGN.md §9): the n x d dataset NEVER materializes — rows are
+    generated tile-by-tile on demand and handed out in fixed-shape chunks.
+
+    Determinism contract (tested in tests/test_ingest.py): row i depends
+    only on ``(name, seed, i)``.  Rows are produced in ``_TILE``-row
+    granules, each from ``SeedSequence([seed, tile_index])``, and chunks are
+    assembled from tile slices — so two streams with different ``chunk``
+    (or different total ``n``) agree bit-exactly on every shared row.  This
+    is what makes the distributed ingest restartable and its selection
+    reproducible across chunk-size/retries.
+
+    ``chunks()`` yields ``(x, n_valid)`` with ``x`` always exactly
+    ``(chunk, d)`` (the ragged final chunk is zero-padded and masked by
+    ``n_valid < chunk``), so every chunk of the stream runs through ONE
+    compiled selection program — the same fixed-shape contract as
+    streaming ingest batches.
+    """
+
+    def __init__(self, name: str, n: int, chunk: int, seed: int = 0):
+        self.spec = DATASETS[name]
+        self.name = name
+        self.n = int(n)
+        self.chunk = int(chunk)
+        self.seed = int(seed)
+        assert self.n > 0 and self.chunk > 0
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, 0]))
+        spec = self.spec
+        total_clusters = spec.classes * spec.clusters_per_class
+        self._means = rng.uniform(0.0, 1.0, size=(total_clusters, spec.dim))
+        self._stds = spec.cluster_std * rng.lognormal(
+            0.0, spec.std_jitter, size=total_clusters)
+        self._tile_cache: tuple[int, np.ndarray] | None = None
+        self._sigma: float | None = None
+
+    @property
+    def d(self) -> int:
+        return self.spec.dim
+
+    @property
+    def num_chunks(self) -> int:
+        return -(-self.n // self.chunk)
+
+    @property
+    def nbytes_f32(self) -> int:
+        """Full f32 footprint IF the dataset were materialized — the
+        denominator of the ingest bench's peak-host-memory gate."""
+        return 4 * self.n * self.d
+
+    def _tile(self, t: int) -> np.ndarray:
+        """The full ``_TILE`` rows of tile t (generated whole regardless of
+        n, so truncating n never shifts surviving rows)."""
+        if self._tile_cache is not None and self._tile_cache[0] == t:
+            return self._tile_cache[1]
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 1 + t]))
+        k = self._means.shape[0]
+        cluster = rng.integers(0, k, size=_TILE)
+        x = self._means[cluster] + rng.normal(
+            0.0, 1.0, size=(_TILE, self.spec.dim)
+        ) * self._stds[cluster][:, None]
+        x = x.astype(np.float32)
+        self._tile_cache = (t, x)
+        return x
+
+    def rows(self, lo: int, hi: int) -> np.ndarray:
+        """Rows [lo, hi) assembled from tiles (hi clamped to n)."""
+        hi = min(hi, self.n)
+        out = np.empty((hi - lo, self.d), np.float32)
+        pos = 0
+        for t in range(lo // _TILE, (hi - 1) // _TILE + 1):
+            ts = t * _TILE
+            s, e = max(lo, ts) - ts, min(hi, ts + _TILE) - ts
+            out[pos : pos + e - s] = self._tile(t)[s:e]
+            pos += e - s
+        return out
+
+    def chunks(self):
+        """Yield ``(x (chunk, d) f32, n_valid)`` fixed-shape host chunks."""
+        for s in range(0, self.n, self.chunk):
+            e = min(s + self.chunk, self.n)
+            if e - s == self.chunk:
+                yield self.rows(s, e), self.chunk
+            else:  # ragged tail: zero-pad + mask, same compiled shape
+                x = np.zeros((self.chunk, self.d), np.float32)
+                x[: e - s] = self.rows(s, e)
+                yield x, e - s
+
+    def materialize(self, limit: int = 1 << 22) -> np.ndarray:
+        """The whole dataset as one array — small-n tests/oracles only."""
+        assert self.n <= limit, \
+            f"refusing to materialize n={self.n} rows (limit {limit})"
+        return self.rows(0, self.n)
+
+    def bandwidth(self) -> float:
+        """Median-distance sigma from a fixed 2048-row prefix sample (the
+        stream analogue of ``median_sigma``; deterministic in ``seed``)."""
+        if self._sigma is None:
+            self._sigma = median_sigma(
+                self.rows(0, min(self.n, 2048)), seed=self.seed)
+        return self._sigma
 
 
 def train_test_split(x, y, frac: float = 0.8, seed: int = 0):

@@ -1,6 +1,6 @@
 """Deterministic synthetic LM token pipeline.
 
-Design constraints (fault tolerance, DESIGN.md §9):
+Design constraints (fault tolerance, DESIGN.md §11):
   * STATELESS indexing — batch contents are a pure function of (seed, step),
     so a restarted job resumes the exact stream by fast-forwarding `step`
     with zero replayed work and no iterator state in checkpoints.

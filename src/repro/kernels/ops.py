@@ -282,13 +282,19 @@ def _matvec_plan(n: int, m: int, d: int, r: int, precision: str,
     return "pallas", blocks
 
 
-def _assign_plan(n: int, m: int, d: int, interpret: bool) -> str:
+def _assign_plan(n: int, m: int, d: int, interpret: bool,
+                 tag: str = "") -> str:
+    """``tag`` namespaces the measured plan: the chunked ingest path
+    (streaming merge + per-chunk assign, DESIGN.md §9) replays ONE shape
+    thousands of times back-to-back, so its crossover is measured and
+    cached under its own ``|<tag>`` key instead of sharing (and fighting
+    over) the serving-shape entry."""
     nb, mb = autotune.bucket(n), autotune.bucket(m)
     db = autotune.bucket(d, lo=8, hi=8192)
     if not autotune.measurement_enabled():
         return autotune.heuristic_plan(n, m, interpret)
     mode = "interp" if interpret else "tpu"
-    key = f"assign|n{nb}|m{mb}|d{db}|{mode}"
+    key = f"assign|n{nb}|m{mb}|d{db}|{mode}" + (f"|{tag}" if tag else "")
     x, c = _bench_rows(nb, db), _bench_rows(mb, db)
 
     def run(plan):
@@ -652,7 +658,8 @@ def _assign_call(xp, cp, vp, *, bn, bm, interpret):
 
 
 def shadow_assign(x, centers, m_valid: int | None = None, *, valid=None,
-                  interpret: bool | None = None, plan: str | None = None):
+                  interpret: bool | None = None, plan: str | None = None,
+                  tag: str = ""):
     """Nearest-center (idx, d2min) via the Pallas assignment kernel.
 
     Validity can be given as a static prefix length ``m_valid`` or as a
@@ -660,6 +667,8 @@ def shadow_assign(x, centers, m_valid: int | None = None, *, valid=None,
     round loop reuses one compiled kernel with a fresh mask each round).
     Assignment always resolves distances in f32 — a bf16 argmin could flip
     nearest centers, so ``precision`` deliberately does not thread here.
+    ``tag`` gives a caller its own autotune-key namespace (the chunked
+    ingest path passes ``tag="ingest"`` — see ``_assign_plan``).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -667,7 +676,7 @@ def shadow_assign(x, centers, m_valid: int | None = None, *, valid=None,
     centers = jnp.asarray(centers, jnp.float32)
     n, m = x.shape[0], centers.shape[0]
     if plan is None:
-        plan = _assign_plan(n, m, x.shape[1], interpret)
+        plan = _assign_plan(n, m, x.shape[1], interpret, tag=tag)
     if valid is None:
         m_valid = m if m_valid is None else int(m_valid)
         valid = (jnp.arange(m) < m_valid).astype(jnp.float32)

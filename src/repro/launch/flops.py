@@ -119,7 +119,7 @@ def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Executed-cost model (per device) for the roofline, DESIGN.md §10.
+# Executed-cost model (per device) for the roofline, DESIGN.md §12.
 #
 # XLA's compiled.cost_analysis() counts while-loop (scan) bodies ONCE, so at
 # these shapes it underreports by the trip counts (verified empirically in

@@ -8,7 +8,7 @@ at production shapes.  GQA is computed grouped — q reshaped to
 
 Decode attention is a single fused einsum pair over the (sharded) KV cache;
 the softmax reductions over a sequence-sharded cache become XLA all-reduces
-(DESIGN.md §9 decode policy).
+(DESIGN.md §10 decode policy).
 """
 from __future__ import annotations
 

@@ -3,7 +3,7 @@
 Memory-critical for kimi-k2 (1T params): f32 AdamW needs ~12 TB of optimizer
 + master state; Adafactor's row/col factors are O(n+m) per matrix.  With bf16
 params this brings the 1T-param train step inside a 256-chip v5e pod
-(DESIGN.md §12).  Matrices (and the trailing two dims of stacked/3D+ leaves)
+(DESIGN.md §14).  Matrices (and the trailing two dims of stacked/3D+ leaves)
 are factored; vectors keep a full second moment.
 """
 from __future__ import annotations

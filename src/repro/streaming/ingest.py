@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ingest_pipeline import pad_block
 from repro.streaming import updates
 from repro.streaming.state import StreamingRSKPCA, _pow2_ceil, solve_jit
 
@@ -80,10 +81,7 @@ def ingest(state: StreamingRSKPCA, xs, batch: int = 256,
         if needs_compaction(state):
             state = compact(state)
         if blk.shape[0] < batch:  # ragged tail: pad + mask, same compile
-            pad = np.zeros((batch, xs.shape[1]), np.float32)
-            pad[: blk.shape[0]] = blk
-            ok = np.zeros((batch,), bool)
-            ok[: blk.shape[0]] = True
+            pad, ok = pad_block(blk, batch)
             state = updates.ingest_batch(state, jnp.asarray(pad),
                                          jnp.asarray(ok))
         else:

@@ -177,3 +177,17 @@ def test_dense_candidate_capped_for_huge_problems(monkeypatch):
     assert kind == "pallas" and blocks is not None
     (names,) = seen.values()
     assert "dense" not in names and "pallas" in names
+
+
+def test_assign_plan_tag_namespaces_key(fresh_cache, monkeypatch):
+    """The chunked-ingest assign path measures under its own ``|ingest``
+    key: tagged and untagged requests at one shape must not share (or
+    clobber) a cache entry."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    autotune.clear(in_memory_only=False)
+    ops._assign_plan(256, 128, 8, True)
+    ops._assign_plan(256, 128, 8, True, tag="ingest")
+    keys = [k for k in autotune._MEM
+            if k.startswith("assign|n256|m128|d8|interp")]
+    assert len(keys) == 2
+    assert sum("|ingest|" in k for k in keys) == 1

@@ -1,5 +1,5 @@
 """Validation of the paper's experimental claims (relative claims — see
-DESIGN.md §11 for the synthetic-dataset caveat).
+DESIGN.md §14 for the synthetic-dataset caveat).
 
 Claims validated:
   C1 (Table 2 / §1): RSKPCA trains faster than KPCA (here >= 3x at n=1200)

@@ -209,6 +209,42 @@ def test_blocked_whole_block_absorbed_in_one_round():
     assert m == 1 and w.sum() == 150 and (a == 0).all()
 
 
+def test_blocked_weighted_masses_conserved():
+    """The weighted variant (the streaming merge's level-2 selector): unit
+    masses reduce to the unweighted selector bit-exactly; arbitrary masses
+    keep the SAME centers/assignment and partition sum(masses)."""
+    x = _data(300, 5, 21)
+    masses = np.random.default_rng(0).integers(1, 9, 300).astype(np.float32)
+    for eps in (0.1, 0.3):
+        c_u, w_u, a_u, m_u = shadow_select_blocked(x, eps, block=32)
+        c_1, w_1, a_1, m_1 = shadow_select_blocked(
+            x, eps, block=32, weights=np.ones(300, np.float32))
+        assert m_1 == m_u and (a_1 == a_u).all()
+        np.testing.assert_array_equal(c_1, c_u)
+        np.testing.assert_allclose(w_1, w_u)
+        c_m, w_m, a_m, m_m = shadow_select_blocked(x, eps, block=32,
+                                                   weights=masses)
+        assert m_m == m_u and (a_m == a_u).all()
+        np.testing.assert_array_equal(c_m, c_u)
+        assert w_m.sum() == masses.sum()
+        ref = np.zeros(m_m)
+        np.add.at(ref, a_m, masses)  # mass really lands on the absorber
+        np.testing.assert_allclose(w_m, ref)
+
+
+def test_streaming_budget_caps_centers():
+    """``budget`` makes m deterministic: over-budget candidates spill
+    weight-exactly into the nearest retained center."""
+    x = _data(500, 4, 13)
+    c, w, a, m = shadow_select_streaming(x, 0.05, chunk=128, block=16,
+                                         budget=32)
+    assert m == 32 and c.shape[0] == 32
+    assert w.sum() == 500.0  # exact (f64 mass bookkeeping)
+    assert (a >= 0).all() and (a < 32).all()
+    c2, w2, _, m2 = shadow_select_streaming(x, 0.05, chunk=128, block=16)
+    assert m2 > 32  # the budget really was binding
+
+
 def test_max_centers_overflow_guard():
     x = _data(100, 4, 11)
     c, w, a, m = (None,) * 4
