@@ -1,7 +1,7 @@
 PYTHONPATH := src
 
 .PHONY: test bench bench-smoke bench-shard bench-stream bench-serve \
-	bench-ingest bench-ingest-full
+	bench-ingest bench-ingest-full bench-methods
 
 # the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
@@ -50,3 +50,12 @@ bench-ingest:
 # growth < 25% of the dataset's 640MB f32 footprint
 bench-ingest-full:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --ingest --full
+
+# method zoo (ISSUE 8): nystrom / wnystrom / rff on the optimized stack.
+# Gate point n=262144 m=2048 (interleaved vs the pre-PR dense nystrom;
+# fails under 5x speedup or > 1pt knn drift from the dense oracle) plus
+# out-of-core n=1M children per method (fails if any holds >= 25% of the
+# data live).  Appends mode=methods rows to BENCH_rskpca.json — the
+# measured Pareto that fit(..., method="auto") selects from
+bench-methods:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --methods

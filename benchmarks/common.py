@@ -5,10 +5,25 @@ carries the figure-specific metric(s) as ``key=value|key=value``.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import threading
 import time
 
 import numpy as np
+
+
+def pin_autotune_cache() -> str:
+    """Pin the autotune measurement cache to one directory for the process.
+
+    Comparative benchmarks time the same op shapes many times; without a
+    pinned cache every subprocess/backend re-measures candidate tile plans
+    inside the timed region and the "speedup" column partly measures
+    autotuning.  Respects an externally-set ``REPRO_AUTOTUNE_CACHE`` (CI pins
+    it to the runner temp dir for hermetic runs)."""
+    return os.environ.setdefault(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(tempfile.gettempdir(), "repro_autotune_cache.json"))
 
 
 def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw):

@@ -36,8 +36,11 @@ BENCH_JSON = os.path.join(
 
 def _row_key(r: dict):
     """Identity of a bench row: its mode plus the scale axis it varies
-    (n for the fit/transform benches, m for the synthetic-center ones)."""
-    return (r.get("mode"), r["n"]) if "n" in r else (r.get("mode"), r.get("m"))
+    (n for the fit/transform benches, m for the synthetic-center ones) plus,
+    for the method-zoo rows, which method the row measures (mode="methods"
+    records several methods at one n)."""
+    scale = r["n"] if "n" in r else r.get("m")
+    return (r.get("mode"), r.get("method"), scale)
 
 
 def merge_rows(old_rows: list, fresh_rows: list) -> list:

@@ -130,6 +130,48 @@ def _assert_ingest_gate() -> None:
           f"{[r['overlap_fraction'] for r in fresh]}", flush=True)
 
 
+def _assert_methods_gate() -> None:
+    """Acceptance gates for the method zoo (ISSUE 8):
+
+    * the gate-point nystrom row (n=262144) must show the optimized fit
+      >= 5x over the pre-PR dense implementation, knn accuracy within 1pt
+      of the dense oracle, and peak live-buffer bytes far below one n x m
+      Gram (the runtime no-n x m certificate);
+    * every method must have a fresh out-of-core row at n >= 1M whose peak
+      live bytes stay under 25% of the materialized dataset.
+    """
+    import json
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows
+             if r.get("mode") == "methods" and not r.get("stale")]
+    assert fresh, "no fresh methods rows were measured"
+    gate = [r for r in fresh
+            if r["method"] == "nystrom" and "fit_speedup" in r]
+    assert gate, "no gate-point nystrom row (fit_speedup) was measured"
+    slow = [r for r in gate if r["fit_speedup"] < 5.0]
+    assert not slow, \
+        f"nystrom fit under 5x vs the pre-PR dense implementation: {slow}"
+    off = [r for r in gate
+           if abs(r["knn_acc"] - r["knn_acc_dense"]) > 0.01]
+    assert not off, f"knn accuracy off the dense oracle by > 1pt: {off}"
+    fat = [r for r in gate if r["peak_live_frac_nm"] >= 0.25]
+    assert not fat, f"nystrom fit peak live bytes ~ an n x m Gram: {fat}"
+    for method in ("nystrom", "wnystrom", "rff"):
+        big = [r for r in fresh
+               if r["method"] == method and r.get("out_of_core")
+               and r["n"] >= 1_000_000]
+        assert big, f"no fresh out-of-core n>=1M row for {method}"
+        resident = [r for r in big if r["peak_live_frac"] >= 0.25]
+        assert not resident, \
+            f"{method} out-of-core fit held >= 25% of the data live: " \
+            f"{resident}"
+    print(f"# methods gate passed: nystrom {gate[0]['fit_speedup']}x "
+          f"(acc {gate[0]['knn_acc']} vs dense {gate[0]['knn_acc_dense']}), "
+          f"all methods out-of-core at n>=1M", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -162,6 +204,15 @@ def main() -> None:
                          "rows to BENCH_rskpca.json and fails if batching "
                          "loses on p99 at saturation or a gated quantized "
                          "tier is slower than bf16")
+    ap.add_argument("--methods", action="store_true",
+                    help="method-zoo bench: nystrom/wnystrom/rff on the "
+                         "optimized stack at n=262144 (+ out-of-core n=1M "
+                         "children); appends mode=methods rows to "
+                         "BENCH_rskpca.json and fails if the nystrom fit is "
+                         "under 5x vs its pre-PR dense implementation, knn "
+                         "accuracy drifts > 1pt off the dense oracle, or "
+                         "any method's n=1M fit holds >= 25% of the data "
+                         "live")
     ap.add_argument("--ingest", action="store_true",
                     help="out-of-core ingestion bench: end-to-end "
                          "select->fit over the chunked source at n=1M "
@@ -192,6 +243,14 @@ def main() -> None:
         print("# --- rskpca out-of-core ingestion ---", flush=True)
         ingest_bench.bench_ingest(full=args.full)
         _assert_ingest_gate()
+        if not args.smoke and not args.serve and not args.methods:
+            return
+
+    if args.methods:
+        from benchmarks import methods_bench
+        print("# --- method zoo (nystrom / wnystrom / rff) ---", flush=True)
+        methods_bench.main(fast=fast)
+        _assert_methods_gate()
         if not args.smoke and not args.serve:
             return
 

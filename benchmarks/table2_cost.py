@@ -9,13 +9,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (gaussian, fit_kpca, fit, fit_nystrom,
+from repro.core import (gaussian, fit_kpca, fit, fit_nystrom, fit_rff,
                         fit_weighted_nystrom, shadow_rsde)
 from repro.data import make_dataset, train_test_split
-from benchmarks.common import timeit, emit
+from benchmarks.common import timeit, emit, pin_autotune_cache
 
 
 def main(fast: bool = True):
+    pin_autotune_cache()  # keep autotune measurement out of the timed fits
     n = 1200 if fast else 3500
     x, y, sigma = make_dataset("pendigits", seed=0, n=n)
     xtr, ytr, xte, yte = train_test_split(x, y)
@@ -29,6 +30,7 @@ def main(fast: bool = True):
         "shadow_rskpca": lambda: fit(xtr, ker, rank, method="shadow", ell=ell),
         "nystrom": lambda: fit_nystrom(xtr, ker, rank, m=m),
         "wnystrom": lambda: fit_weighted_nystrom(xtr, ker, rank, m=m),
+        "rff": lambda: fit_rff(xtr, ker, rank, n_features=m),  # D = m
     }
     base_train = base_test = None
     for name, f in fits.items():

@@ -17,7 +17,8 @@ class RSKPCAExperimentConfig:
     rank: int = 5
     train_frac: float = 0.8
     n_runs: int = 50          # paper averages over 50 runs
-    methods: tuple = ("kpca", "uniform", "nystrom", "wnystrom", "shadow")
+    methods: tuple = ("kpca", "uniform", "nystrom", "wnystrom", "shadow",
+                      "rff", "auto")
     rsde_schemes: tuple = ("shadow", "kmeans", "paring", "herding")
 
     def ell_grid(self):

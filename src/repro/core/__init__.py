@@ -11,7 +11,8 @@ from repro.core.shadow import (  # noqa: F401
     shadow_select_blocked, shadow_select_streaming, two_level_merge,
 )
 from repro.core.rsde import (  # noqa: F401
-    RSDE, make_rsde, shadow_rsde, kmeans_rsde, paring_rsde, herding_rsde,
+    RSDE, make_rsde, shadow_rsde, kmeans_rsde, kmeans_rsde_stream,
+    paring_rsde, herding_rsde,
 )
 from repro.core.rskpca import (  # noqa: F401
     KPCAModel, fit, fit_rskpca, fit_kpca, fit_subsampled_kpca,
@@ -21,7 +22,16 @@ from repro.core.pipeline import fit_centers, fit_shadow_fused  # noqa: F401
 from repro.core.ingest_pipeline import (  # noqa: F401
     IngestStats, ingest_fit, pad_block, select_streaming,
 )
-from repro.core.nystrom import fit_nystrom, fit_weighted_nystrom  # noqa: F401
+from repro.core.nystrom import (  # noqa: F401
+    fit_nystrom, fit_nystrom_stream, fit_weighted_nystrom,
+    fit_weighted_nystrom_stream,
+)
+from repro.core.random_features import (  # noqa: F401
+    RFFKPCAModel, fit_rff, fit_rff_stream, sample_rff,
+)
+from repro.core.methods import (  # noqa: F401
+    METHODS, MethodSpec, fit_stream, select_method,
+)
 from repro.core import mmd  # noqa: F401
 from repro.core.mmd import (  # noqa: F401
     weight_update_bound, absorb_bound, insert_bound, remove_bound,

@@ -368,3 +368,107 @@ def fit_rskpca_sharded(centers, weights, n: int, kernel: Kernel, rank: int,
         cp, wp, jnp.float32(n), kernel, rank, mesh, axis, min_m,
         matfree=use_mf)
     return lam, proj[:m]
+
+
+# --------------------------------------------------------------------------
+# method zoo: sharded Nystrom extension + RFF covariance / projection
+# (DESIGN.md §15 — the mesh= paths of fit_nystrom / fit_rff)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("kernel", "mesh", "axis"))
+def _sharded_extend_jit(xp, lmk, bmat, kernel: Kernel, mesh: Mesh,
+                        axis: str):
+    def block(x_loc, l_rep, b_rep):
+        if kernel.backend == "pallas":
+            return kernel_ops.gram_matvec(
+                x_loc, l_rep, b_rep, sigma=kernel.sigma, p=kernel.p,
+                precision=kernel.precision)
+        return gram_matrix_dense(kernel, x_loc, l_rep) @ b_rep
+
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(None, None)),
+        out_specs=P(axis, None), check_vma=False,
+    )(xp, lmk, bmat)
+
+
+def sharded_nystrom_extend(x, landmarks, bmat, kernel: Kernel, mesh: Mesh,
+                           axis: str = "data") -> Array:
+    """One chunk of the Nystrom extension proj = K_nm @ B with data ROWS
+    sharded over ``axis`` and the (m, d) landmarks + (m, r) fold matrix
+    replicated.  Per device the fused ``gram_matvec`` kernel streams K
+    tiles through VMEM — the local rows x m Gram block never materializes
+    (same contract as the single-device chunked extension)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    ndev = mesh.shape[axis]
+    xp = _pad_rows(x, ndev * 128)
+    out = _sharded_extend_jit(xp, jnp.asarray(landmarks, jnp.float32),
+                              jnp.asarray(bmat, jnp.float32), kernel, mesh,
+                              axis)
+    return out[:n]
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "scale", "precision"))
+def sharded_rff_cov(xd, ok, omega, phase, mesh: Mesh, axis: str = "data", *,
+                    scale: float, precision: str = "f32") -> Array:
+    """One chunk's feature-covariance contribution sum_i phi(x_i) phi(x_i)^T
+    with the chunk's rows sharded over ``axis``: each device computes its
+    local phi^T phi partial and a psum replicates the (D, D) result —
+    only O(D^2) crosses the interconnect per chunk, never features."""
+    def block(x_loc, ok_loc, w_rep, b_rep):
+        z = kernel_ops.rff_features(x_loc, w_rep, b_rep, scale=scale,
+                                    precision=precision)
+        z = jnp.where(ok_loc[:, None], z, 0.0)
+        cd = jnp.float32 if precision == "f32" else jnp.bfloat16
+        part = jax.lax.dot_general(
+            z.astype(cd), z.astype(cd), (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return jax.lax.psum(part, axis)
+
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(None, None), P(None)),
+        out_specs=P(None, None), check_vma=False,
+    )(xd, ok, omega, phase)
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "axis", "chunk", "scale", "precision"))
+def _sharded_rff_project_jit(xp, omega, phase, u, mesh: Mesh, axis: str,
+                             chunk: int | None, scale: float,
+                             precision: str):
+    def block(x_loc, w_rep, b_rep, u_rep):
+        return kernel_ops.rff_project(
+            x_loc, w_rep, b_rep, u_rep, scale=scale, chunk=chunk,
+            precision=precision)
+
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(None), P(None, None)),
+        out_specs=P(axis, None), check_vma=False,
+    )(xp, omega, phase, u)
+
+
+def sharded_rff_project(x, omega, phase, u, mesh: Mesh, axis: str = "data",
+                        chunk: int | None = None,
+                        precision: str = "f32") -> Array:
+    """z = sqrt(2/D) cos(x Omega^T + b) @ U with query ROWS sharded and
+    (Omega, b, U) replicated — the RFF analogue of sharded_kpca_project,
+    with the same shape-bucket padding so ragged serving streams retrace
+    once per (chunk * ndev) bucket."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    ndev = mesh.shape[axis]
+    scale = float(np.sqrt(2.0 / omega.shape[0]))
+    if chunk is not None and n > chunk * ndev:
+        xp = _pad_rows(x, ndev * chunk)
+        eff_chunk = chunk
+    else:
+        xp = _pad_rows(x, ndev * 128)
+        eff_chunk = None
+    z = _sharded_rff_project_jit(
+        xp, jnp.asarray(omega, jnp.float32), jnp.asarray(phase, jnp.float32),
+        jnp.asarray(u, jnp.float32), mesh, axis, eff_chunk, scale, precision)
+    return z[:n]

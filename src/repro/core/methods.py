@@ -1,0 +1,175 @@
+"""Method zoo dispatch (ISSUE 8; DESIGN.md §15).
+
+One registry mapping method names to their resident and out-of-core fit
+entrypoints plus the paper-Table-2 cost model, one ``fit_stream`` front door
+routing every method through the optimized stack (Pallas gram ops, autotuned
+plans, matrix-free eigensolves, chunked out-of-core ingestion), and one
+``select_method`` picker that reads the MEASURED accuracy-vs-time-vs-memory
+Pareto recorded by benchmarks/methods_bench.py (mode=methods rows in
+BENCH_rskpca.json) instead of guessing from asymptotics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.kernels_math import Kernel
+
+#: objective -> (accuracy, fit-time, model-bytes) weights over the
+#: normalized Pareto frontier.  "balanced" trades a point of accuracy
+#: against an order of magnitude of time or memory.
+_OBJECTIVES = {
+    "balanced": (1.0, 0.5, 0.5),
+    "accuracy": (1.0, 0.05, 0.05),
+    "speed": (0.25, 1.0, 0.1),
+    "memory": (0.25, 0.1, 1.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """One row of the zoo: entrypoints + paper-Table-2 asymptotics."""
+
+    name: str
+    train: str   # training cost, paper Table 2 notation
+    test: str    # per-query embedding cost
+    space: str   # model storage
+
+    def fit(self, x, kernel: Kernel, rank: int, **kw):
+        from repro.core import rskpca
+        return rskpca.fit(x, kernel, rank, method=self.name, **kw)
+
+
+METHODS = {
+    "shadow": MethodSpec("shadow", train="O(mn + m^2 k)", test="O(km)",
+                         space="O(m(d + k))"),
+    "nystrom": MethodSpec("nystrom", train="O(nm + m^2 k)", test="O(kn)",
+                          space="O(n(d + k))"),
+    "wnystrom": MethodSpec("wnystrom", train="O(mnT + m^2 k)", test="O(km)",
+                           space="O(m(d + k))"),
+    "rff": MethodSpec("rff", train="O(nD(d + D))", test="O(D(d + k))",
+                      space="O(D(d + k))"),
+}
+
+
+def fit_stream(source, kernel: Kernel, rank: int, *, method: str = "shadow",
+               ell: float | None = None, m: int | None = None, **kw):
+    """Out-of-core front door: fit any zoo method from a chunk source
+    (``.chunks()`` protocol or an iterable of ``(x, n_valid)`` blocks).
+
+    Every route keeps device residency at O(chunk + model) — the ingest
+    pipeline for shadow, host-buffered streaming extension for nystrom,
+    streaming mini-batch k-means for wnystrom, streamed feature covariance
+    for rff.  Returns ``(KPCAModel, IngestStats)``.
+    """
+    if method == "shadow":
+        from repro.core.ingest_pipeline import ingest_fit
+        assert ell is not None, "shadow RSDE is parameterized by ell"
+        return ingest_fit(source, kernel, rank, ell=ell, **kw)
+    if method == "nystrom":
+        from repro.core.nystrom import fit_nystrom_stream
+        assert m is not None, "nystrom needs an explicit m"
+        return fit_nystrom_stream(source, kernel, rank, m, **kw)
+    if method == "wnystrom":
+        from repro.core.nystrom import fit_weighted_nystrom_stream
+        assert m is not None, "weighted nystrom needs an explicit m"
+        return fit_weighted_nystrom_stream(source, kernel, rank, m, **kw)
+    if method == "rff":
+        from repro.core.random_features import (DEFAULT_FEATURES,
+                                                fit_rff_stream)
+        return fit_rff_stream(source, kernel, rank,
+                              n_features=(m or DEFAULT_FEATURES), **kw)
+    raise ValueError(f"unknown streaming method {method!r} "
+                     f"(choose from {sorted(METHODS)})")
+
+
+def _bench_path() -> str:
+    env = os.environ.get("REPRO_BENCH_JSON")
+    if env:
+        return env
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.join(root, "BENCH_rskpca.json")
+
+
+def _method_rows() -> list[dict]:
+    path = _bench_path()
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError):
+        return []
+    rows = doc.get("rows", []) if isinstance(doc, dict) else doc
+    return [r for r in rows
+            if isinstance(r, dict)
+            if r.get("mode") == "methods" and r.get("method") in METHODS
+            and all(k in r for k in ("n", "fit_s", "knn_acc", "model_bytes"))]
+
+
+def _pareto(rows: list[dict]) -> list[dict]:
+    """Drop rows dominated on (accuracy up, fit_s down, model_bytes down)."""
+    keep = []
+    for r in rows:
+        dominated = any(
+            o is not r
+            and o["knn_acc"] >= r["knn_acc"]
+            and o["fit_s"] <= r["fit_s"]
+            and o["model_bytes"] <= r["model_bytes"]
+            and (o["knn_acc"] > r["knn_acc"] or o["fit_s"] < r["fit_s"]
+                 or o["model_bytes"] < r["model_bytes"])
+            for o in rows)
+        if not dominated:
+            keep.append(r)
+    return keep
+
+
+def _heuristic(n: int, objective: str) -> str:
+    """Deterministic fallback when no bench rows exist: Table 2 asymptotics.
+    Memory/speed objectives take the n-independent model (rff); accuracy
+    stays with the exact-kernel compressed fit (shadow); balanced flips to
+    rff once the nystrom-style O(n) storage is the dominant term."""
+    if objective == "memory":
+        return "rff"
+    if objective == "speed":
+        return "rff" if n > 100_000 else "nystrom"
+    if objective == "accuracy":
+        return "shadow"
+    return "shadow" if n <= 262_144 else "rff"
+
+
+def select_method(n: int, d: int, rank: int, *,
+                  objective: str = "balanced") -> str:
+    """Pick a zoo method for (n, d, rank) from the measured Pareto.
+
+    Uses the bench rows nearest in log(n), drops Pareto-dominated methods,
+    then scores the frontier with the objective's (accuracy, time, memory)
+    weights — time and memory on log scales, so a 10x cost gap weighs like a
+    normalized accuracy point.  Falls back to a deterministic Table-2
+    heuristic when no mode=methods rows exist.
+    """
+    if objective not in _OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r} "
+                         f"(choose from {sorted(_OBJECTIVES)})")
+    rows = _method_rows()
+    if not rows:
+        return _heuristic(n, objective)
+    dist = {r["n"]: abs(np.log(max(n, 1)) - np.log(max(r["n"], 1)))
+            for r in rows}
+    n_star = min(dist, key=dist.get)
+    cands = _pareto([r for r in rows if r["n"] == n_star])
+    wa, wt, wm = _OBJECTIVES[objective]
+    acc = np.array([r["knn_acc"] for r in cands], np.float64)
+    lt = np.log(np.maximum([r["fit_s"] for r in cands], 1e-9))
+    lm = np.log(np.maximum([r["model_bytes"] for r in cands], 1.0))
+
+    def norm(v):  # -> [0, 1] over the frontier; constant -> 0
+        span = v.max() - v.min()
+        return (v - v.min()) / span if span > 0 else np.zeros_like(v)
+
+    score = wa * norm(acc) - wt * norm(lt) - wm * norm(lm)
+    return cands[int(np.argmax(score))]["method"]

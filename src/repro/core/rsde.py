@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.kernels_math import Kernel, gram_matrix
 from repro.core import shadow as shadow_mod
+from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
 
@@ -123,12 +124,86 @@ def kmeans_rsde(x, kernel: Kernel, m: int, iters: int = 10, seed: int = 0) -> RS
 
 
 def paring_rsde(x, kernel: Kernel, m: int, seed: int = 0) -> RSDE:
-    """KDE paring [8] (simplified): uniform subsample, uniform weights n/m."""
+    """KDE paring [8] (simplified): uniform subsample, uniform weights n/m.
+
+    Subsampling via ``jax.random`` keyed off ``seed`` — deterministic across
+    hosts/backends, unlike the host ``np.random`` state it replaces.
+    """
     x = np.asarray(x)
-    rng = np.random.default_rng(seed)
-    idx = rng.choice(x.shape[0], size=m, replace=False)
+    idx = np.asarray(jax.random.choice(
+        jax.random.PRNGKey(seed), x.shape[0], (m,), replace=False))
     w = np.full(m, x.shape[0] / m, dtype=np.float64)
     return RSDE(x[idx].copy(), w, n=x.shape[0], scheme="paring")
+
+
+@partial(jax.jit, static_argnames=("m",))
+def _kmeans_stream_update(sums, counts, x, ok, idx, m: int):
+    """Accumulate per-center sums/counts over one chunk's VALID rows.
+
+    Padding rows route to a discard bucket (segment m) instead of being
+    masked by a (rows, m) one-hot — ``segment_sum`` keeps the chunk update
+    O(rows * d), which is what lets the stream pass scale to 1M rows.
+    """
+    okf = ok.astype(x.dtype)
+    idx_safe = jnp.where(ok, idx, m)
+    sums = sums + jax.ops.segment_sum(
+        x * okf[:, None], idx_safe, num_segments=m + 1)[:m]
+    counts = counts + jax.ops.segment_sum(
+        okf, idx_safe, num_segments=m + 1)[:m]
+    return sums, counts
+
+
+def kmeans_rsde_stream(source, kernel: Kernel, m: int, seed: int = 0):
+    """One-pass streaming mini-batch k-means RSDE over a chunk source
+    (``.chunks()`` protocol or an iterable of ``(x, n_valid)`` blocks).
+
+    Centers seed from the first chunk (``jax.random`` keyed off ``seed``;
+    the first chunk must hold at least m valid rows), each chunk assigns
+    through the Pallas ``shadow_assign`` kernel, and centers refresh to the
+    running means after every chunk (mini-batch Lloyd).  Weights are the
+    final-pass cluster counts, summing exactly to n.  Device residency is
+    O(chunk + m*d).  Returns ``(RSDE, IngestStats)``.
+    """
+    import time
+
+    from repro.core.ingest_pipeline import IngestStats  # lazy: circular
+
+    stats = IngestStats()
+    t0 = time.perf_counter()
+    chunks = source.chunks() if hasattr(source, "chunks") else iter(source)
+    centers = sums = counts = None
+    for xb, nv in chunks:
+        t1 = time.perf_counter()
+        nv = int(nv)
+        x = jnp.asarray(np.asarray(xb, np.float32))
+        ok = jnp.arange(x.shape[0]) < nv
+        if centers is None:
+            if nv < m:
+                raise ValueError(
+                    f"first chunk holds {nv} valid rows < m={m}")
+            pick = jax.random.choice(jax.random.PRNGKey(seed), nv, (m,),
+                                     replace=False)
+            centers = x[pick]
+            sums = jnp.zeros((m, x.shape[1]), jnp.float32)
+            counts = jnp.zeros((m,), jnp.float32)
+        idx, _ = kernel_ops.shadow_assign(x, centers, tag="kmeans")
+        sums, counts = _kmeans_stream_update(sums, counts, x, ok, idx, m)
+        centers = jnp.where(counts[:, None] > 0,
+                            sums / jnp.maximum(counts, 1.0)[:, None],
+                            centers)
+        stats.chunks += 1
+        stats.rows += nv
+        stats.compute_s += time.perf_counter() - t1
+    if centers is None:
+        raise ValueError("empty source: no chunks to ingest")
+    stats.m = m
+    stats.select_s = time.perf_counter() - t0
+    stats.wall_s = stats.select_s
+    rsde = RSDE(
+        np.asarray(centers), np.asarray(counts, np.float64),
+        n=int(stats.rows), scheme="kmeans-stream",
+    )
+    return rsde, stats
 
 
 def herding_rsde(x, kernel: Kernel, m: int) -> RSDE:

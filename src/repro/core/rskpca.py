@@ -322,8 +322,8 @@ def fit_subsampled_kpca(x, kernel: Kernel, rank: int, m: int,
     """Uniform-subsample KPCA baseline (paper §6 'subsampled KPCA'):
     unweighted KPCA on m uniformly chosen points."""
     x = np.asarray(x)
-    rng = np.random.default_rng(seed)
-    idx = rng.choice(x.shape[0], size=m, replace=False)
+    idx = np.asarray(jax.random.choice(
+        jax.random.PRNGKey(seed), x.shape[0], (m,), replace=False))
     return dataclasses.replace(fit_kpca(x[idx], kernel, rank), method="uniform")
 
 
@@ -345,6 +345,29 @@ def fit(x, kernel: Kernel, rank: int, *, method: str = "shadow",
         kernel = kernel.with_backend(backend)
     if precision is not None:
         kernel = kernel.with_precision(precision)
+    if method == "auto":
+        # measured accuracy/time/memory Pareto from BENCH_rskpca.json
+        # mode=methods rows (benchmarks/methods_bench.py); deterministic
+        # heuristic when no bench rows exist (core/methods.py)
+        from repro.core.methods import select_method
+        method = select_method(np.shape(x)[0], np.shape(x)[1], rank,
+                               objective=kw.pop("objective", "balanced"))
+        if method == "shadow" and ell is None:
+            ell = 4.0  # middle of the paper's ell sweep (configs)
+    if method == "nystrom":
+        from repro.core.nystrom import fit_nystrom
+        assert m is not None, "nystrom needs an explicit m"
+        return fit_nystrom(x, kernel, rank, m, mesh=mesh, axis=axis, **kw)
+    if method == "wnystrom":
+        from repro.core.nystrom import fit_weighted_nystrom
+        assert m is not None, "weighted nystrom needs an explicit m"
+        return fit_weighted_nystrom(x, kernel, rank, m, mesh=mesh,
+                                    axis=axis, **kw)
+    if method == "rff":
+        from repro.core.random_features import DEFAULT_FEATURES, fit_rff
+        return fit_rff(x, kernel, rank,
+                       n_features=(m or DEFAULT_FEATURES),
+                       mesh=mesh, axis=axis, **kw)
     if method in ("kpca", "uniform"):
         if mesh is not None:
             raise ValueError(

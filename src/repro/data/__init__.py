@@ -1,4 +1,5 @@
 from repro.data.kpca_datasets import (  # noqa: F401
-    make_dataset, DATASETS, median_sigma, train_test_split, knn_classify,
+    ChunkedDataset, make_dataset, DATASETS, median_sigma, train_test_split,
+    knn_classify,
 )
 from repro.data.tokens import TokenPipeline, synthetic_batch  # noqa: F401

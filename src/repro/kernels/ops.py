@@ -39,6 +39,7 @@ from repro.kernels import gram as _gram
 from repro.kernels import shadow_assign as _assign
 from repro.kernels import kpca_project as _project
 from repro.kernels import quantize as _quantize
+from repro.kernels import rff as _rff
 
 Array = jax.Array
 
@@ -829,5 +830,160 @@ def kpca_project(x, centers, projector, *, sigma: float, p: int = 2,
     # a fresh buffer this function owns, so donation needs no copy
     xpad = _pad_rows(x, chunk)
     pieces = [run(xpad[s : s + chunk], owned=True)  # slices are fresh buffers
+              for s in range(0, xpad.shape[0], chunk)]
+    return jnp.concatenate(pieces, axis=0)[:n]
+
+
+# --------------------------------------------------------------------------
+# rff_project (random-Fourier-feature transform; kernels/rff.py)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "precision"))
+def rff_features(x, omega, phase, *, scale, precision="f32"):
+    """Dense feature map phi_D(x) = scale * cos(x Omega^T + b), f32 out.
+
+    The RFF fit accumulates the D x D feature covariance phi^T phi
+    chunk-by-chunk off this (core/random_features.py), so the (n, D) feature
+    matrix never materializes beyond one chunk.  bf16 runs the x Omega^T
+    matmul on bf16 operands with f32 accumulation; the cosine stays f32.
+    """
+    cd = _compute_dtype(precision)
+    s = jax.lax.dot_general(
+        jnp.asarray(x, jnp.float32).astype(cd),
+        jnp.asarray(omega, jnp.float32).astype(cd),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    return jnp.cos(s + jnp.asarray(phase, jnp.float32)[None, :]) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "precision"))
+def _rff_dense(x, omega, phase, u, *, scale, precision):
+    z = rff_features(x, omega, phase, scale=scale, precision=precision)
+    cd = _compute_dtype(precision)
+    return jax.lax.dot_general(
+        z.astype(cd), jnp.asarray(u, jnp.float32).astype(cd),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+
+_RFF_TILES_TPU = (256, 512, 1024)
+_RFF_TILES_INTERPRET = (512, 1024, 2048)
+
+
+def _rff_costs(n: int, nfeat: int, d: int, r: int, bn: int,
+               dense: bool) -> tuple[float, float]:
+    """Analytic (flops, bytes): n rows x (feature matmul 2Dd + cosine ~2D +
+    component matmul 2Dr).  The fused kernel re-reads Omega/phase/U per grid
+    step; the dense fallback writes AND re-reads the (n, D) feature block."""
+    flops = float(n) * (2.0 * nfeat * d + 2.0 * nfeat + 2.0 * nfeat * r)
+    if dense:
+        byts = 4.0 * (n * d + nfeat * d + n * r + 2.0 * n * nfeat
+                      + nfeat * r)
+    else:
+        tiles = max(1, -(-n // bn))
+        byts = 4.0 * (n * d + n * r) \
+            + tiles * 4.0 * (nfeat * d + nfeat + nfeat * r)
+    return flops, byts
+
+
+def _rff_plan(n: int, nfeat: int, d: int, r: int, precision: str,
+              interpret: bool) -> str:
+    """Roofline-tuned plan for rff_project: "dense" or "pallas:<row-tile>"."""
+    nb, fb = autotune.bucket(n), autotune.bucket(nfeat)
+    db = autotune.bucket(d, lo=8, hi=8192)
+    rb = autotune.bucket(r, lo=8, hi=512)
+    if not autotune.measurement_enabled():
+        return autotune.heuristic_plan(n, nfeat, interpret)
+    mode = "interp" if interpret else "tpu"
+    key = f"rffproj|n{nb}|D{fb}|d{db}|r{rb}|{precision}|{mode}"
+    x, w = _bench_rows(nb, db), _bench_rows(fb, db)
+    u = _bench_rows(w.shape[0], rb)
+    phase = w[:, 0]
+    scale = (2.0 / w.shape[0]) ** 0.5
+
+    def run(plan):
+        return lambda: jax.block_until_ready(rff_project(
+            x, w, phase, u, scale=scale, interpret=interpret,
+            precision=precision, plan=plan))
+
+    neff, feff = x.shape[0], w.shape[0]
+    tiles = _RFF_TILES_INTERPRET if interpret else _RFF_TILES_TPU
+    cands, costs = {}, {}
+    for t in tiles:
+        name = f"pallas:{t}"
+        bn_eff = min(t, _round_up(neff, 128))
+        cands[name] = run(name)
+        costs[name] = _rff_costs(neff, feff, db, rb, bn_eff, dense=False)
+    if nb * fb <= autotune.DENSE_MAX_CELLS:
+        cands["dense"] = run("dense")
+        costs["dense"] = _rff_costs(neff, feff, db, rb, 0, dense=True)
+    return autotune.best_roofline(key, cands, costs,
+                                  default=f"pallas:{tiles[0]}")
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bn", "interpret"),
+                   donate_argnums=(0,))
+def _rff_call(xp, wp, bp, up, *, scale, bn, interpret):
+    # xp (the padded query chunk) is donated under the same ownership
+    # contract as _project_call
+    return _rff.rff_project_pallas(xp, wp, bp, up, scale=scale, block_n=bn,
+                                   interpret=interpret)
+
+
+def rff_project(x, omega, phase, u, *, scale: float | None = None,
+                chunk: int | None = None, interpret: bool | None = None,
+                precision: str = "f32", plan: str | None = None) -> Array:
+    """Fused z = sqrt(2/D) cos(x Omega^T + b) @ U — the RFF-KPCA transform.
+
+    Pads the feature count D to a lane multiple with zero Omega/phase/U rows
+    (cos(0+0)=1 times a zero U row contributes nothing); ``chunk`` streams
+    query rows in fixed-size slices exactly like kpca_project, so a ragged
+    query stream compiles once.  ``scale`` defaults to sqrt(2/D) with the
+    true (unpadded) D.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+    omega = jnp.asarray(omega, jnp.float32)
+    phase_j = jnp.asarray(phase, jnp.float32)
+    u = jnp.asarray(u, jnp.float32)
+    n, r = x.shape[0], u.shape[1]
+    nfeat, d = omega.shape
+    assert u.shape[0] == nfeat and phase_j.shape == (nfeat,), \
+        (omega.shape, phase_j.shape, u.shape)
+    if scale is None:
+        scale = (2.0 / nfeat) ** 0.5
+    if plan is None:
+        plan = _rff_plan(min(n, chunk or n), nfeat, d, r, precision,
+                         interpret)
+    cd = _compute_dtype(precision)
+    fpad = _round_up(nfeat, 128) - nfeat
+    wp = _pad_rows(omega, 128).astype(cd)
+    bp = jnp.pad(phase_j, (0, fpad)).reshape(1, -1)
+    rp = _round_up(r, 128)
+    up = _pad_rows(u, 128)
+    up = jnp.pad(up, ((0, 0), (0, rp - r)))
+    tile = int(plan.split(":", 1)[1]) if plan.startswith("pallas:") else 512
+
+    def run(xs, owned):
+        if plan == "dense":
+            return _rff_dense(xs, omega, phase_j, u, scale=float(scale),
+                              precision=precision)
+        bn = min(tile, _round_up(xs.shape[0], 128))
+        xsp = _pad_rows(xs, bn).astype(cd)
+        if xsp is xs and not owned:
+            # same ownership guard as kpca_project: _rff_call donates its
+            # first argument, never donate a buffer the caller still owns
+            xsp = jnp.array(xsp, copy=True)
+        out = _rff_call(xsp, wp, bp, up, scale=float(scale), bn=bn,
+                        interpret=bool(interpret))
+        return out[: xs.shape[0], :r]
+
+    if chunk is None or n <= chunk:
+        return run(x, owned=False)
+    chunk = _round_up(chunk, 128)
+    xpad = _pad_rows(x, chunk)
+    pieces = [run(xpad[s : s + chunk], owned=True)
               for s in range(0, xpad.shape[0], chunk)]
     return jnp.concatenate(pieces, axis=0)[:n]

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused random-Fourier-feature KPCA projection.
+
+z = phi_D(x) @ U with phi_D(x) = sqrt(2/D) cos(x Omega^T + b) — the O(D(d+k))
+test path of RFF-KPCA (Sriperumbudur & Sterge; DESIGN.md §15).  Fusing the
+feature map with the component contraction keeps the (bn x D) feature block
+in VMEM and writes only the (bn x r) embedding to HBM, the same bandwidth
+argument as kpca_project.
+
+Grid over row tiles of X; Omega (D x d), phase (1 x D) and U (D x r) are
+VMEM-resident (D plays the role m plays for the center-based methods).  Both
+matmuls hit the MXU; the cosine runs f32 regardless of operand precision.
+
+Padding contract (enforced upstream in ops.rff_project): padded FEATURE rows
+must carry zero Omega rows, zero phase, and zero U rows — cos(0 + 0) = 1
+times a zero U row contributes nothing.  Padded data columns are zero in
+both x and Omega (they don't move the inner product).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _rff_kernel(x_ref, w_ref, b_ref, u_ref, o_ref, *, scale: float):
+    # mixed precision: bf16 x/Omega feed the MXU as-is with f32 accumulation;
+    # the phase add and the cosine stay f32 (DESIGN.md §3 conventions)
+    x = x_ref[...]                        # (bn, d) f32 or bf16
+    w = w_ref[...]                        # (D, d)
+    b = b_ref[...].astype(jnp.float32)    # (1, D)
+    u = u_ref[...]                        # (D, r)
+    s = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                     # (bn, D) f32
+    feat = jnp.cos(s + b) * scale         # f32 feature block, never to HBM
+    o_ref[...] = jnp.dot(
+        feat.astype(x.dtype), u.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def rff_project_pallas(x: Array, omega: Array, phase: Array, u: Array, *,
+                       scale: float, block_n: int = 512,
+                       interpret: bool = False,
+                       out_dtype=jnp.float32) -> Array:
+    """Fused z = (scale * cos(x Omega^T + b)) @ U.  Pad n to block_n and
+    (D, r) to lane multiples upstream (padding contract in the module doc);
+    ``scale`` is sqrt(2/D) with the TRUE (unpadded) feature count."""
+    n, d = x.shape
+    nfeat, d2 = omega.shape
+    nfeat2, r = u.shape
+    assert d == d2 and nfeat == nfeat2 and n % block_n == 0
+    assert phase.shape == (1, nfeat), phase.shape
+
+    kernel = functools.partial(_rff_kernel, scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((nfeat, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, nfeat), lambda i: (0, 0)),
+            pl.BlockSpec((nfeat, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), out_dtype),
+        interpret=interpret,
+    )(x, omega, phase, u)
