@@ -1,7 +1,7 @@
 PYTHONPATH := src
 
 .PHONY: test bench bench-smoke bench-shard bench-stream bench-serve \
-	bench-ingest bench-ingest-full bench-methods
+	bench-ingest bench-ingest-full bench-methods bench-obs
 
 # the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
@@ -59,3 +59,10 @@ bench-ingest-full:
 # measured Pareto that fit(..., method="auto") selects from
 bench-methods:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --methods
+
+# telemetry overhead (DESIGN.md §16): interleaved A/B/A of obs-enabled vs
+# disabled on the serving dispatch and ingest selection paths.  Appends
+# mode=obs rows to BENCH_rskpca.json; fails if enabled overhead exceeds
+# both the 2% budget and the run's own A/A noise floor
+bench-obs:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --obs

@@ -2,6 +2,15 @@
 
 Every benchmark emits rows ``name,us_per_call,derived`` where ``derived``
 carries the figure-specific metric(s) as ``key=value|key=value``.
+
+Bench-trajectory hygiene: ``merge_rows`` (the single merge rule every
+BENCH_rskpca.json writer goes through) stamps each freshly-measured row
+with the run's git SHA and ISO-8601 UTC timestamp, so any row in the
+accumulated file is attributable to the commit and time that measured it.
+The stamp is captured ONCE by the entry point (``run.py`` calls
+``set_run_stamp(**make_stamp())``) and passed down — library code never
+reads the clock or the repo state ambiently, so replaying a bench module
+in a test or notebook stamps nothing unless the caller opted in.
 """
 from __future__ import annotations
 
@@ -11,6 +20,66 @@ import threading
 import time
 
 import numpy as np
+
+
+#: The run-level provenance stamp applied to fresh bench rows; set by the
+#: entry point (run.py / a bench module's __main__), never read ambiently.
+_RUN_STAMP: dict | None = None
+
+
+def make_stamp() -> dict:
+    """Capture this run's provenance: short git SHA + ISO-8601 UTC time.
+
+    Called by ENTRY POINTS only (run.py main); the values then flow through
+    ``set_run_stamp`` -> ``merge_rows`` so library code stays free of
+    ambient clock/repo reads."""
+    import datetime
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
+    return {"git_sha": sha or "unknown", "measured_at": ts}
+
+
+def set_run_stamp(**stamp) -> None:
+    """Install the provenance stamp ``merge_rows`` applies to fresh rows."""
+    global _RUN_STAMP
+    _RUN_STAMP = dict(stamp) if stamp else None
+
+
+def _row_key(r: dict):
+    """Identity of a bench row: its mode plus the scale axis it varies
+    (n for the fit/transform benches, m for the synthetic-center ones) plus,
+    for the method-zoo rows, which method the row measures (mode="methods"
+    records several methods at one n)."""
+    scale = r["n"] if "n" in r else r.get("m")
+    return (r.get("mode"), r.get("method"), scale)
+
+
+def merge_rows(old_rows: list, fresh_rows: list, stamp: dict | None = None
+               ) -> list:
+    """Merge freshly-measured rows into the accumulated BENCH file rows.
+
+    Any old row — fresh OR ``"stale": true`` — whose (scale, mode) identity
+    was re-measured is DROPPED in favor of the new measurement, so stale
+    markers never outlive a refresh of their pair; rows of pairs not touched
+    this run are preserved untouched.  Fresh rows are stamped with ``stamp``
+    (default: the run-level stamp installed via ``set_run_stamp``) so the
+    trajectory stays attributable across PRs.
+    """
+    stamp = _RUN_STAMP if stamp is None else stamp
+    if stamp:
+        fresh_rows = [{**r, **stamp} for r in fresh_rows]
+    fresh_keys = {_row_key(r) for r in fresh_rows}
+    return [r for r in old_rows if _row_key(r) not in fresh_keys] \
+        + fresh_rows
 
 
 def pin_autotune_cache() -> str:

@@ -27,32 +27,15 @@ import subprocess
 import sys
 import time
 
-from benchmarks.common import emit
+# merge_rows/_row_key live in common.py now (they stamp fresh rows with
+# run provenance — git SHA + timestamp — installed by run.py); re-exported
+# here because every bench writer historically imported them from this
+# module.
+from benchmarks.common import _row_key, emit, merge_rows  # noqa: F401
 
 BENCH_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_rskpca.json")
-
-
-def _row_key(r: dict):
-    """Identity of a bench row: its mode plus the scale axis it varies
-    (n for the fit/transform benches, m for the synthetic-center ones) plus,
-    for the method-zoo rows, which method the row measures (mode="methods"
-    records several methods at one n)."""
-    scale = r["n"] if "n" in r else r.get("m")
-    return (r.get("mode"), r.get("method"), scale)
-
-
-def merge_rows(old_rows: list, fresh_rows: list) -> list:
-    """Merge freshly-measured rows into the accumulated BENCH file rows.
-
-    Any old row — fresh OR ``"stale": true`` — whose (scale, mode) identity
-    was re-measured is DROPPED in favor of the new measurement, so stale
-    markers never outlive a refresh of their pair; rows of pairs not touched
-    this run are preserved untouched.
-    """
-    fresh_keys = {_row_key(r) for r in fresh_rows}
-    return [r for r in old_rows if _row_key(r) not in fresh_keys] + fresh_rows
 
 
 def _merge_into_bench(fresh_rows: list) -> None:

@@ -172,6 +172,29 @@ def _assert_methods_gate() -> None:
           f"all methods out-of-core at n>=1M", flush=True)
 
 
+def _assert_obs_gate() -> None:
+    """Acceptance gate for the telemetry layer (DESIGN.md §16): every
+    freshly-measured mode="obs" row must keep enabled-telemetry overhead
+    under the 2% budget, floored by the run's own interleaved A/A noise —
+    a box too jittery to resolve 2% must not fail on jitter, but overhead
+    above both the budget and the noise floor always fails."""
+    import json
+    from benchmarks.obs_overhead import OBS_OVERHEAD_FRAC_MAX
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows if r.get("mode") == "obs" and not r.get("stale")]
+    assert len(fresh) >= 2, f"expected serve + ingest obs rows, got {fresh}"
+    bad = [r for r in fresh
+           if r["overhead_frac"] > max(OBS_OVERHEAD_FRAC_MAX,
+                                       r["aa_delta_frac"])]
+    assert not bad, f"enabled-telemetry overhead above budget + noise: {bad}"
+    print(f"# obs gate passed: overhead "
+          f"{[(r['method'], r['overhead_frac']) for r in fresh]} vs budget "
+          f"{OBS_OVERHEAD_FRAC_MAX} (A/A noise "
+          f"{[r['aa_delta_frac'] for r in fresh]})", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -221,8 +244,19 @@ def main() -> None:
                          "and fails on the rows/s floor, overlap_fraction "
                          "< 0.5, or (n=10M) peak host memory >= 25% of "
                          "the dataset footprint")
+    ap.add_argument("--obs", action="store_true",
+                    help="telemetry-overhead bench: interleaved A/B/A of "
+                         "obs-enabled vs disabled on the serving dispatch "
+                         "and ingest selection paths; appends mode=obs rows "
+                         "to BENCH_rskpca.json and fails if enabled "
+                         "overhead exceeds both the 2% budget and the "
+                         "run's A/A noise floor")
     args = ap.parse_args()
     fast = not args.full
+    # provenance: stamp every fresh bench row this process writes with the
+    # commit + UTC time that measured it (common.merge_rows applies it)
+    from benchmarks import common
+    common.set_run_stamp(**common.make_stamp())
     if args.mesh and not args.smoke:
         ap.error("--mesh requires --smoke (the sharded bench extends the "
                  "smoke's BENCH_rskpca.json)")
@@ -251,6 +285,14 @@ def main() -> None:
         print("# --- method zoo (nystrom / wnystrom / rff) ---", flush=True)
         methods_bench.main(fast=fast)
         _assert_methods_gate()
+        if not args.smoke and not args.serve:
+            return
+
+    if args.obs:
+        from benchmarks import obs_overhead
+        print("# --- telemetry overhead (obs on vs off) ---", flush=True)
+        obs_overhead.bench_obs(fast=fast)
+        _assert_obs_gate()
         if not args.smoke and not args.serve:
             return
 

@@ -122,7 +122,9 @@ def bench_serve(fast: bool = True, m: int = 512, d: int = 16, rank: int = 8,
                 lats[name] = _open_loop(fe, pool, arrivals)
             finally:
                 fe.close()
-            stats[name] = fe.stats
+            # locked consistent copy — never read .stats fields raw across
+            # threads (the dispatcher mutates them under the lock)
+            stats[name] = fe.snapshot()
         p = {f"p{q}_{name}_ms": round(
                 float(np.percentile(lats[name], q)) * 1e3, 2)
              for name in lats for q in (50, 99)}

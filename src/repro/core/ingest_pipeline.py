@@ -39,8 +39,26 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import shadow as shadow_mod
 from repro.core.rsde import RSDE
 from repro.core.shadow import StreamingMerge
+from repro.obs import metrics as _om
+from repro.obs.trace import span as _span
 
 Array = jax.Array
+
+# pipeline telemetry (DESIGN.md §16): the IngestStats fields double as LIVE
+# gauges, refreshed per chunk — a 10M-row run is observable while it runs,
+# not only from the end-of-run stats object.
+_M_CHUNKS = _om.counter("ingest.chunks")
+_M_ROWS = _om.counter("ingest.rows")
+_M_CHUNK_MS = _om.histogram("ingest.chunk_ms")
+
+
+def _observe_chunk(stats: "IngestStats") -> None:
+    _om.gauge("ingest.feed_s").set(stats.feed_s)
+    _om.gauge("ingest.stall_s").set(stats.stall_s)
+    _om.gauge("ingest.compute_s").set(stats.compute_s)
+    _om.gauge("ingest.overlap_fraction").set(stats.overlap_fraction)
+    _om.gauge("ingest.m").set(stats.m)
+    _om.gauge("ingest.spilled").set(stats.spilled)
 
 
 def pad_block(x, rows: int):
@@ -123,14 +141,20 @@ class _PrefetchFeed:
 
     def _run(self, it, place):
         try:
+            k = 0
             while True:
                 t0 = time.perf_counter()
-                try:
-                    item = next(it)
-                except StopIteration:
-                    break
-                staged = place(*item)
+                with _span("ingest.feed_chunk", chunk=k):
+                    try:
+                        item = next(it)
+                    except StopIteration:
+                        break
+                    staged = place(*item)
+                # feed_s stops HERE: time blocked on a full queue below is
+                # the feed being AHEAD of compute, not the feed working
+                # (asserted by the slow-consumer test in tests/test_ingest)
                 self._stats.feed_s += time.perf_counter() - t0
+                k += 1
                 self._q.put(staged)
         except BaseException as e:  # re-raised on the consumer side
             self._err = e
@@ -200,22 +224,33 @@ def select_streaming(source, eps: float, *, block: int = 256,
     for xd, okd, n_valid in _PrefetchFeed(_chunk_iter(source), place, stats,
                                           depth=prefetch):
         t0 = time.perf_counter()
-        if merge is None:
-            merge = StreamingMerge(xd.shape[1], eps, budget=budget,
-                                   block=block)
-        b = max(1, min(block, xd.shape[0] // ndev))
-        if mesh is not None:
-            from repro.core.distributed import _chunk_select_sharded
-            c, w = _chunk_select_sharded(xd, okd, eps2, mesh, axis, b)
-        else:
-            _, c, w, _, _ = shadow_mod._blocked_select_device(
-                xd, eps2, b, okd, stop0)
-        # np.asarray blocks until the device round finishes — compute_s is
-        # true select+merge time, which is what overlap compares feed_s to
-        merge.update(np.asarray(c), np.asarray(w))
+        with _span("ingest.select_chunk", chunk=stats.chunks,
+                   rows=int(n_valid)):
+            if merge is None:
+                merge = StreamingMerge(xd.shape[1], eps, budget=budget,
+                                       block=block)
+            b = max(1, min(block, xd.shape[0] // ndev))
+            if mesh is not None:
+                from repro.core.distributed import _chunk_select_sharded
+                c, w = _chunk_select_sharded(xd, okd, eps2, mesh, axis, b)
+            else:
+                _, c, w, _, _ = shadow_mod._blocked_select_device(
+                    xd, eps2, b, okd, stop0)
+            # np.asarray blocks until the device round finishes — compute_s
+            # is true select+merge time, which is what overlap compares
+            # feed_s to
+            with _span("ingest.merge"):
+                merge.update(np.asarray(c), np.asarray(w))
         stats.chunks += 1
         stats.rows += n_valid
         stats.compute_s += time.perf_counter() - t0
+        stats.m = merge.m
+        if _om.enabled():
+            _M_CHUNKS.inc()
+            _M_ROWS.inc(n_valid)
+            _M_CHUNK_MS.observe((time.perf_counter() - t0) * 1e3)
+            stats.spilled = merge.spilled
+            _observe_chunk(stats)
     if merge is None:
         raise ValueError("empty source: no chunks to ingest")
     stats.select_s = time.perf_counter() - t_start
@@ -243,17 +278,24 @@ def ingest_fit(source, kernel, rank: int, *, ell: float = 4.0,
     from repro.core.rskpca import fit_rskpca
 
     t0 = time.perf_counter()
-    rsde, stats = select_streaming(
-        source, kernel.epsilon(ell), block=block, budget=budget, mesh=mesh,
-        axis=axis, prefetch=prefetch)
+    with _span("ingest.select"):
+        rsde, stats = select_streaming(
+            source, kernel.epsilon(ell), block=block, budget=budget,
+            mesh=mesh, axis=axis, prefetch=prefetch)
     t1 = time.perf_counter()
-    if mesh is None:
-        model = fit_centers(rsde.centers, rsde.weights, rsde.n, kernel, rank,
-                            matfree=matfree, method="rskpca+shadow-ingest")
-    else:
-        model = fit_rskpca(rsde, kernel, rank, mesh=mesh, axis=axis,
-                           matfree=matfree)
-        model = dataclasses.replace(model, method="rskpca+shadow-ingest")
+    with _span("ingest.fit", m=rsde.m) as sp:
+        if mesh is None:
+            model = fit_centers(rsde.centers, rsde.weights, rsde.n, kernel,
+                                rank, matfree=matfree,
+                                method="rskpca+shadow-ingest")
+        else:
+            model = fit_rskpca(rsde, kernel, rank, mesh=mesh, axis=axis,
+                               matfree=matfree)
+            model = dataclasses.replace(model, method="rskpca+shadow-ingest")
+        sp.sync(model.projector)
     stats.fit_s = time.perf_counter() - t1
     stats.wall_s = time.perf_counter() - t0
+    if _om.enabled():
+        _om.gauge("ingest.fit_s").set(stats.fit_s)
+        _om.gauge("ingest.rows_per_s").set(stats.rows_per_s)
     return model, stats

@@ -32,6 +32,18 @@ import threading
 import time
 from typing import Callable
 
+from repro.obs import metrics as _om
+from repro.obs.trace import span as _span
+
+# plan-cache telemetry: a "miss" pays a measurement (warmup + reps per
+# candidate) inside the request, so the hit/miss ratio is the difference
+# between a warm serving process and one paying autotune latency on live
+# traffic.  ``autotune.roofline_abs_rel_err`` records |predicted-measured|
+# / measured of each roofline winner — the model-vs-hardware error.
+_M_HITS = _om.counter("autotune.plan_hits")
+_M_MISSES = _om.counter("autotune.plan_misses")
+_ROOFLINE_ERR_BOUNDS = (0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0)
+
 _LOCK = threading.RLock()
 _MEM: dict[str, dict] = {}     # key -> {"winner": name, "us": {name: micros}}
 _DISK_LOADED = False
@@ -180,21 +192,24 @@ def best(key: str, candidates: dict[str, Callable[[], object]],
         _load_disk()
         hit = _MEM.get(key)
         if hit is not None and hit.get("winner") in candidates:
+            _M_HITS.inc()
             return hit["winner"]
         if len(candidates) == 1:
             return next(iter(candidates))
+        _M_MISSES.inc()
         times: dict[str, float] = {}
-        for name, thunk in candidates.items():
-            try:
-                thunk()  # compile warmup
-                t = []
-                for _ in range(_REPS):
-                    t0 = time.perf_counter()
-                    thunk()
-                    t.append(time.perf_counter() - t0)
-                times[name] = min(t) * 1e6
-            except Exception:
-                continue
+        with _span("autotune.measure", key=key, n_candidates=len(candidates)):
+            for name, thunk in candidates.items():
+                try:
+                    thunk()  # compile warmup
+                    t = []
+                    for _ in range(_REPS):
+                        t0 = time.perf_counter()
+                        thunk()
+                        t.append(time.perf_counter() - t0)
+                    times[name] = min(t) * 1e6
+                except Exception:
+                    continue
         if not times:
             return default
         winner = min(times, key=times.get)
@@ -233,21 +248,25 @@ def best_roofline(key: str, candidates: dict[str, Callable[[], object]],
         _load_disk()
         hit = _MEM.get(key)
         if hit is not None and hit.get("winner") in candidates:
+            _M_HITS.inc()
             return hit["winner"]
         if len(candidates) == 1:
             return next(iter(candidates))
+        _M_MISSES.inc()
         times: dict[str, float] = {}
-        for name, thunk in candidates.items():
-            try:
-                thunk()  # compile warmup
-                t = []
-                for _ in range(_REPS):
-                    t0 = time.perf_counter()
-                    thunk()
-                    t.append(time.perf_counter() - t0)
-                times[name] = min(t)
-            except Exception:
-                continue
+        with _span("autotune.measure_roofline", key=key,
+                   n_candidates=len(candidates)):
+            for name, thunk in candidates.items():
+                try:
+                    thunk()  # compile warmup
+                    t = []
+                    for _ in range(_REPS):
+                        t0 = time.perf_counter()
+                        thunk()
+                        t.append(time.perf_counter() - t0)
+                    times[name] = min(t)
+                except Exception:
+                    continue
         if not times:
             return default
         peak_flops = max(costs[c][0] / t for c, t in times.items())
@@ -257,6 +276,11 @@ def best_roofline(key: str, candidates: dict[str, Callable[[], object]],
         t_best = min(pred.values())
         near = [c for c in pred if pred[c] <= 1.10 * t_best]
         winner = min(near, key=times.get)
+        # roofline model error on the winner: how far the analytic
+        # prediction sat from what the hardware actually did
+        _om.histogram("autotune.roofline_abs_rel_err",
+                      bounds=_ROOFLINE_ERR_BOUNDS).observe(
+            abs(pred[winner] - times[winner]) / max(times[winner], 1e-12))
         _MEM[key] = {
             "winner": winner,
             "us": {c: round(t * 1e6, 1) for c, t in times.items()},

@@ -1,0 +1,308 @@
+"""Process-global metric registry: counters, gauges, histograms (§16).
+
+One registry per process, keyed by ``(name, labels)``.  Metric objects are
+created once (usually at module import of the instrumented subsystem) and
+mutated on the hot path:
+
+  * ``counter(name).inc(k)`` — monotone event counts;
+  * ``gauge(name).set(v)`` — last-value signals (queue depth, overlap
+    fraction, eigenvalues);
+  * ``histogram(name).observe(v)`` — FIXED-bucket distributions.  The bucket
+    bounds are chosen at creation; ``observe`` is a bisect plus two integer
+    adds — no allocation, no unbounded reservoir — and p50/p99 are
+    recovered from the bucket counts by linear interpolation, which is how
+    the serving bench reads tail latency without recording every sample.
+
+Every mutator checks the module-global ``_ENABLED`` flag first, so
+instrumented code calls metrics UNCONDITIONALLY and pays one function call
+plus one global load while observability is off (the ≤2%/~0% overhead
+contract benchmarks/obs_overhead.py gates).  Mutations take the metric's own
+lock only when enabled — exact under the threaded serving/ingest drivers.
+
+Export:
+
+  * :func:`dump` — Prometheus-style text exposition (names sanitized to
+    ``[a-z0-9_]``, labels inline, histograms as cumulative ``_bucket``
+    series plus interpolated ``{quantile=...}`` rows);
+  * :func:`write` — atomic dump to a file;
+  * :func:`start_reporter` — periodic snapshot thread re-dumping every
+    ``interval_s``;
+  * :func:`add_hook` — callbacks run at the START of every dump/snapshot;
+    pull-style samplers (obs.spectral.SpectralHealth) refresh their gauges
+    here so scrapes always see current derived state.
+"""
+from __future__ import annotations
+
+import bisect
+import os
+import threading
+
+_ENABLED = False
+
+_LOCK = threading.Lock()          # registry structure only, never hot-path
+_REGISTRY: dict[tuple, object] = {}
+_HOOKS: list = []
+
+#: Default histogram bounds: exponential grid covering 50us .. 30s — wide
+#: enough for per-dispatch service times and whole-chunk ingest rounds.
+TIME_BUCKETS_MS = (
+    0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
+    100.0, 200.0, 500.0, 1000.0, 2000.0, 5000.0, 10000.0, 30000.0,
+)
+#: Default bounds for size-shaped histograms (batch rows, coalesce counts).
+SIZE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096,
+                8192, 16384)
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def _labels_key(labels: dict | None) -> tuple:
+    return () if not labels else tuple(sorted(labels.items()))
+
+
+class Counter:
+    __slots__ = ("name", "labels", "value", "_lock")
+
+    def __init__(self, name: str, labels: tuple):
+        self.name = name
+        self.labels = labels
+        self.value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, v: int | float = 1) -> None:
+        if not _ENABLED:
+            return
+        with self._lock:
+            self.value += v
+
+
+class Gauge:
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: tuple):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        if not _ENABLED:
+            return
+        self.value = float(v)  # single attribute store: atomic under the GIL
+
+
+class Histogram:
+    """Fixed-bucket histogram; ``bounds`` are the inclusive upper edges of
+    the finite buckets (one implicit +inf bucket follows)."""
+
+    __slots__ = ("name", "labels", "bounds", "counts", "sum", "count",
+                 "_lock")
+
+    def __init__(self, name: str, labels: tuple, bounds):
+        self.name = name
+        self.labels = labels
+        self.bounds = tuple(float(b) for b in bounds)
+        assert self.bounds == tuple(sorted(self.bounds)), "bounds must sort"
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.sum = 0.0
+        self.count = 0
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        if not _ENABLED:
+            return
+        i = bisect.bisect_left(self.bounds, v)
+        with self._lock:
+            self.counts[i] += 1
+            self.sum += v
+            self.count += 1
+
+    def quantile(self, q: float) -> float:
+        """Approximate q-quantile by linear interpolation inside the bucket
+        holding rank ``q * count`` (0.0 when empty)."""
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if cum + c >= target and c > 0:
+                lo = 0.0 if i == 0 else self.bounds[i - 1]
+                hi = self.bounds[i] if i < len(self.bounds) \
+                    else self.bounds[-1]
+                return lo + (hi - lo) * max(0.0, target - cum) / c
+            cum += c
+        return self.bounds[-1]
+
+
+def _get(cls, name: str, labels: dict | None, *args):
+    key = (cls.__name__, name, _labels_key(labels))
+    with _LOCK:
+        m = _REGISTRY.get(key)
+        if m is None:
+            m = cls(name, _labels_key(labels), *args)
+            _REGISTRY[key] = m
+        return m
+
+
+def counter(name: str, labels: dict | None = None) -> Counter:
+    return _get(Counter, name, labels)
+
+
+def gauge(name: str, labels: dict | None = None) -> Gauge:
+    return _get(Gauge, name, labels)
+
+
+def histogram(name: str, labels: dict | None = None,
+              bounds=TIME_BUCKETS_MS) -> Histogram:
+    return _get(Histogram, name, labels, bounds)
+
+
+def add_hook(fn) -> None:
+    """Register a pre-dump sampler (idempotent per function object)."""
+    with _LOCK:
+        if fn not in _HOOKS:
+            _HOOKS.append(fn)
+
+
+def remove_hook(fn) -> None:
+    with _LOCK:
+        if fn in _HOOKS:
+            _HOOKS.remove(fn)
+
+
+def clear() -> None:
+    """Zero every registered metric IN PLACE and drop hooks (tests).
+
+    The registry entries themselves survive: instrumented modules hold
+    their metric handles from import time (``_M_REQS`` etc.), and emptying
+    the registry would orphan those handles from every later dump while
+    they kept counting into the void.  Resetting values keeps handle
+    identity — a metric object obtained before ``clear`` is the same
+    object (still registered) after."""
+    with _LOCK:
+        metrics = list(_REGISTRY.values())
+        _HOOKS.clear()
+    for m in metrics:
+        if isinstance(m, Counter):
+            with m._lock:
+                m.value = 0
+        elif isinstance(m, Histogram):
+            with m._lock:
+                m.counts = [0] * (len(m.bounds) + 1)
+                m.sum = 0.0
+                m.count = 0
+        else:
+            m.value = 0.0
+
+
+def _san(name: str) -> str:
+    return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+
+
+def _fmt_labels(labels: tuple, extra: tuple = ()) -> str:
+    items = labels + extra
+    if not items:
+        return ""
+    return "{" + ",".join(f'{_san(str(k))}="{v}"' for k, v in items) + "}"
+
+
+def _run_hooks() -> None:
+    with _LOCK:
+        hooks = list(_HOOKS)
+    for fn in hooks:
+        try:
+            fn()
+        except Exception:  # a broken sampler must not kill the scrape
+            pass
+
+
+def snapshot() -> dict:
+    """Hook-refreshed point-in-time dict of every metric series."""
+    _run_hooks()
+    out: dict = {}
+    with _LOCK:
+        metrics = list(_REGISTRY.values())
+    for m in metrics:
+        key = _san(m.name) + _fmt_labels(m.labels)
+        if isinstance(m, Histogram):
+            out[key] = {"count": m.count, "sum": round(m.sum, 6),
+                        "p50": round(m.quantile(0.5), 6),
+                        "p99": round(m.quantile(0.99), 6)}
+        else:
+            out[key] = m.value
+    return out
+
+
+def dump() -> str:
+    """Prometheus-style text exposition of the whole registry."""
+    _run_hooks()
+    with _LOCK:
+        metrics = sorted(_REGISTRY.values(),
+                         key=lambda m: (m.name, m.labels))
+    lines: list[str] = []
+    seen_type: set[str] = set()
+    for m in metrics:
+        name = _san(m.name)
+        kind = ("counter" if isinstance(m, Counter)
+                else "histogram" if isinstance(m, Histogram) else "gauge")
+        if name not in seen_type:
+            lines.append(f"# TYPE {name} {kind}")
+            seen_type.add(name)
+        if isinstance(m, Histogram):
+            cum = 0
+            for b, c in zip(m.bounds, m.counts):
+                cum += c
+                lines.append(
+                    f"{name}_bucket{_fmt_labels(m.labels, (('le', b),))}"
+                    f" {cum}")
+            lines.append(
+                f"{name}_bucket{_fmt_labels(m.labels, (('le', '+Inf'),))}"
+                f" {m.count}")
+            lines.append(f"{name}_sum{_fmt_labels(m.labels)} {m.sum:.6g}")
+            lines.append(f"{name}_count{_fmt_labels(m.labels)} {m.count}")
+            for q in (0.5, 0.99):
+                lines.append(
+                    f"{name}{_fmt_labels(m.labels, (('quantile', q),))}"
+                    f" {m.quantile(q):.6g}")
+        else:
+            v = m.value
+            vs = f"{v:.6g}" if isinstance(v, float) else str(v)
+            lines.append(f"{name}{_fmt_labels(m.labels)} {vs}")
+    return "\n".join(lines) + "\n"
+
+
+def write(path: str) -> None:
+    """Atomic text dump to ``path``."""
+    text = dump()
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+
+
+class Reporter:
+    """Periodic snapshot thread: re-dumps the registry to ``path`` every
+    ``interval_s`` until :meth:`stop`."""
+
+    def __init__(self, path: str, interval_s: float):
+        self.path = path
+        self.interval_s = float(interval_s)
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True,
+                                   name="repro-obs-reporter")
+        self._t.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            write(self.path)
+
+    def stop(self) -> None:
+        """Final dump, then join."""
+        self._stop.set()
+        self._t.join()
+        write(self.path)
+
+
+def start_reporter(path: str, interval_s: float = 10.0) -> Reporter:
+    return Reporter(path, interval_s)

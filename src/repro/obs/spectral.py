@@ -1,0 +1,126 @@
+"""Operator spectral-health monitor: "is the approximation still valid?"
+
+The paper's §5 machinery makes the reduced-set approximation's error
+QUANTIFIABLE — eigenvalue drift, the accumulated Theorem-5.x update bound,
+and the windowed MMD against the substitute density are all closed-form or
+cached.  This sampler lifts those quantities into scrapeable gauges, so a
+production deployment watches the approximation's validity the same way it
+watches queue depth:
+
+  * ``spectral.eigval{k=...}`` — top-``rank`` eigenvalues of the served
+    operator (plus ``spectral.gap``, the gap below the serving rank: a
+    collapsing gap means the rank choice itself is going stale);
+  * ``spectral.err_est`` / ``spectral.budget_ratio`` — the accumulated
+    per-update perturbation bound and its fraction of the re-solve budget
+    (ratio -> 1 means the next maintenance re-solves);
+  * ``spectral.resid`` — the measured Rayleigh residual, the a-posteriori
+    certificate of the patched eigensystem;
+  * ``spectral.mmd`` / ``spectral.mmd_ratio`` — windowed MMD from a
+    ``DriftDetector`` against its Theorem-5.1 trigger threshold;
+  * ``spectral.quant_bound_max`` / ``spectral.budget_headroom`` — worst
+    per-channel quantized-projector error bound of the PUBLISHED snapshot
+    and the slack left once it and ``err_est`` are charged against the
+    budget (same kappa currency, DESIGN.md §8).
+
+Sampling costs a handful of host syncs of O(rank) scalars plus (optionally)
+one jitted MMD evaluation, so it runs per maintenance interval or per
+metrics scrape — never per request.  ``observe`` is a no-op while
+observability is disabled; :meth:`SpectralHealth.install` hooks the sampler
+into every ``metrics.dump()``/``snapshot()`` so scrapes self-refresh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs import metrics
+
+#: Largest eigenvalue index exported individually; higher ranks would only
+#: bloat series cardinality (the full spectrum lives in the state anyway).
+MAX_EIGVAL_SERIES = 16
+
+
+class SpectralHealth:
+    """Pull-style sampler over a ``StreamingRSKPCA`` state (duck-typed: any
+    object with ``eigvals/rank/err_est/budget/resid/m/n`` works).
+
+    ``server`` (a ``swap.HotSwapServer``) adds the quantized-projector
+    bound of the *published* snapshot; ``detector`` (a
+    ``drift.DriftDetector``) adds the windowed MMD once its window fills.
+    """
+
+    def __init__(self, get_state=None, server=None, detector=None):
+        self._get_state = get_state
+        self.server = server
+        self.detector = detector
+        self._hook = None
+
+    # -- one-shot sampling -------------------------------------------------
+
+    def observe(self, state=None) -> None:
+        if not metrics.enabled():
+            return
+        state = state if state is not None else (
+            self._get_state() if self._get_state is not None else None)
+        if state is None:
+            return
+        lam = np.asarray(state.eigvals, np.float64)
+        rank = int(state.rank)
+        for k in range(min(rank, MAX_EIGVAL_SERIES)):
+            metrics.gauge("spectral.eigval", {"k": k}).set(float(lam[k]))
+        if lam.shape[0] > rank:
+            metrics.gauge("spectral.gap").set(
+                float(lam[rank - 1] - lam[rank]))
+        err = float(state.err_est)
+        budget = float(state.budget)
+        metrics.gauge("spectral.err_est").set(err)
+        metrics.gauge("spectral.budget_ratio").set(
+            err / budget if np.isfinite(budget) and budget > 0 else 0.0)
+        metrics.gauge("spectral.resid").set(float(state.resid))
+        metrics.gauge("spectral.n_patched").set(float(state.n_patched))
+        metrics.gauge("spectral.m").set(float(state.m))
+        metrics.gauge("spectral.n").set(float(state.n))
+
+        if self.detector is not None and self.detector.full:
+            mmd = float(self.detector.mmd(state))
+            thr = float(self.detector.threshold)
+            metrics.gauge("spectral.mmd").set(mmd)
+            metrics.gauge("spectral.mmd_ratio").set(
+                mmd / thr if thr > 0 else 0.0)
+
+        if self.server is not None:
+            self._observe_quant(err, budget)
+
+    def _observe_quant(self, err: float, budget: float) -> None:
+        """Error-bound headroom of the published (possibly quantized)
+        serving snapshot, in the same currency as the update budget."""
+        snap = getattr(self.server, "_snapshot", None)
+        if snap is None:
+            return
+        _, projector, kernel, projector_q = snap
+        qmax = 0.0
+        if projector_q is not None:
+            from repro.kernels import quantize
+
+            qmax = float(np.max(np.asarray(quantize.projection_error_bound(
+                projector, kernel.precision, kappa=kernel.kappa))))
+            metrics.gauge("spectral.quant_bound_max").set(qmax)
+        if np.isfinite(budget):
+            metrics.gauge("spectral.budget_headroom").set(
+                budget - err - qmax)
+
+    # -- scrape integration ------------------------------------------------
+
+    def install(self) -> "SpectralHealth":
+        """Refresh the gauges at the start of every metrics dump/snapshot
+        (requires a ``get_state`` provider)."""
+        assert self._get_state is not None, \
+            "install() needs SpectralHealth(get_state=...)"
+        if self._hook is None:
+            self._hook = self.observe
+            metrics.add_hook(self._hook)
+        return self
+
+    def uninstall(self) -> None:
+        if self._hook is not None:
+            metrics.remove_hook(self._hook)
+            self._hook = None

@@ -39,6 +39,19 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.core.shadow import _pow2_ceil
+from repro.obs import metrics as _om
+from repro.obs.trace import span as _span
+
+# serving metrics (DESIGN.md §16): created once at import, no-ops until
+# obs.enable().  Per-bucket series use the pow2 bucket as the only label —
+# bounded cardinality by construction.
+_M_REQS = _om.counter("serve.requests")
+_M_ROWS = _om.counter("serve.rows")
+_M_BATCHES = _om.counter("serve.batches")
+_M_ERRORS = _om.counter("serve.errors")
+_M_QDEPTH = _om.gauge("serve.queue_depth")
+_M_COALESCE = _om.histogram("serve.coalesce_rows", bounds=_om.SIZE_BUCKETS)
+_M_SLACK = _om.histogram("serve.deadline_slack_ms")
 
 #: EWMA smoothing for the per-bucket service-time estimate.
 _EWMA_ALPHA = 0.3
@@ -92,6 +105,10 @@ class BatchingFrontEnd:
         self.slo_s = float(slo_ms) * 1e-3
         self.min_wait_s = float(min_wait_ms) * 1e-3
         self.stats = ServeStats()
+        # per-bucket (histogram, gauge) handles, resolved once per bucket:
+        # a registry lookup per dispatch (label-dict alloc + registry lock)
+        # is exactly the kind of hot-path cost the <= 2% budget forbids
+        self._obs_bucket: dict[int, tuple] = {}
         self._pending: list[_Pending] = []
         self._cond = threading.Condition()
         self._closed = False
@@ -116,8 +133,24 @@ class BatchingFrontEnd:
             self._pending.append(req)
             self.stats.requests += 1
             self.stats.rows += x.shape[0]
+            _M_QDEPTH.set(len(self._pending))
             self._cond.notify_all()
+        _M_REQS.inc()
+        _M_ROWS.inc(x.shape[0])
         return fut
+
+    def snapshot(self) -> ServeStats:
+        """Consistent copy of the counters, taken under the front-end lock.
+
+        ``stats`` itself is mutated by the dispatcher thread under the lock
+        (``ewma_service_s`` in particular is updated per batch); reading its
+        fields directly from another thread can observe a torn view — e.g.
+        ``batches`` from before a dispatch with the EWMA from after it.
+        Benches and monitors read THIS instead (benchmarks/serve_latency.py
+        does)."""
+        with self._cond:
+            return dataclasses.replace(
+                self.stats, ewma_service_s=dict(self.stats.ewma_service_s))
 
     def __enter__(self):
         return self
@@ -167,6 +200,11 @@ class BatchingFrontEnd:
         """FIFO-coalesce whole requests up to max_batch rows (an oversized
         first request ships alone — transform chunks internally)."""
         batch, rows = [], 0
+        if self._pending and _om.enabled():
+            # slack left on the OLDEST deadline at dispatch: negative means
+            # the request already blew its SLO before the batch even formed
+            _M_SLACK.observe(
+                (self._pending[0].deadline - time.monotonic()) * 1e3)
         while self._pending:
             nxt = self._pending[0].x.shape[0]
             if batch and rows + nxt > self.max_batch:
@@ -175,6 +213,7 @@ class BatchingFrontEnd:
             batch.append(self._pending.pop(0))
         if rows >= self.max_batch:
             self.stats.full_dispatches += 1
+        _M_QDEPTH.set(len(self._pending))
         return batch
 
     def _serve(self, batch: list[_Pending]) -> None:
@@ -187,20 +226,34 @@ class BatchingFrontEnd:
                 [xs, np.zeros((bucket - rows, xs.shape[1]), xs.dtype)])
         t0 = time.monotonic()
         try:
-            z = np.asarray(self.server.transform(xs))[:rows]
+            with _span("serve.batch", rows=rows, bucket=bucket,
+                       requests=len(batch)):
+                z = np.asarray(self.server.transform(xs))[:rows]
         except BaseException as e:  # noqa: BLE001 — every caller must learn
+            _M_ERRORS.inc()
             for p in batch:
                 p.future.set_exception(e)
             return
         dt = time.monotonic() - t0
         with self._cond:
             prev = self.stats.ewma_service_s.get(bucket)
-            self.stats.ewma_service_s[bucket] = dt if prev is None \
+            ewma = dt if prev is None \
                 else _EWMA_ALPHA * dt + (1.0 - _EWMA_ALPHA) * prev
+            self.stats.ewma_service_s[bucket] = ewma
             self.stats.batches += 1
             self.stats.max_batch_rows = max(self.stats.max_batch_rows, rows)
             if len(batch) > 1:
                 self.stats.batched_rows += rows
+        _M_BATCHES.inc()
+        _M_COALESCE.observe(rows)
+        if _om.enabled():  # per-bucket series: one histogram + one gauge
+            handles = self._obs_bucket.get(bucket)
+            if handles is None:
+                handles = self._obs_bucket.setdefault(bucket, (
+                    _om.histogram("serve.service_ms", {"bucket": bucket}),
+                    _om.gauge("serve.ewma_service_ms", {"bucket": bucket})))
+            handles[0].observe(dt * 1e3)
+            handles[1].set(ewma * 1e3)
         off = 0
         for p in batch:
             k = p.x.shape[0]

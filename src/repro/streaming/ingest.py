@@ -12,14 +12,50 @@ re-solved exactly, which also resets the error budget.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ingest_pipeline import pad_block
+from repro.obs import metrics as _om
+from repro.obs.trace import span as _span
 from repro.streaming import updates
 from repro.streaming.state import StreamingRSKPCA, _pow2_ceil, solve_jit
+
+# ingest-driver telemetry (DESIGN.md §16).  Everything here samples at
+# BATCH granularity on the host side — the jitted device programs are never
+# touched, so enabling observability cannot retrace anything.
+_M_BATCHES = _om.counter("stream.batches")
+_M_ROWS = _om.counter("stream.rows")
+_M_COMPACTIONS = _om.counter("stream.compactions")
+_M_BATCH_MS = _om.histogram("stream.ingest_batch_ms")
+
+
+def _observe_batch(state: StreamingRSKPCA, m_before: int,
+                   rows: int) -> None:
+    """Post-batch accounting (only under obs: costs a few host syncs).
+
+    Update kinds are recovered from the state delta: live-slot growth counts
+    the INSERTS, the remaining real rows were ABSORBED into existing
+    shadows.  The eigen-maintenance decision is read off the budget
+    machinery: a re-solve zeroes both ``err_est`` and ``n_patched``
+    (state.py), a patch leaves ``n_patched`` strictly above its pre-batch
+    rollover floor."""
+    m_after = state.m
+    inserted = max(0, m_after - m_before)
+    _om.counter("stream.updates", {"kind": "insert"}).inc(inserted)
+    _om.counter("stream.updates", {"kind": "absorb"}).inc(
+        max(0, rows - inserted))
+    patched_after = int(state.n_patched)
+    resolved = patched_after == 0 and float(state.err_est) == 0.0
+    _om.counter("stream.maintenance",
+                {"decision": "resolve" if resolved else "patch"}).inc()
+    _om.gauge("stream.err_est").set(float(state.err_est))
+    _om.gauge("stream.n_patched").set(patched_after)
+    _om.gauge("stream.m").set(m_after)
+    _om.gauge("stream.fill_fraction").set(m_after / state.cap)
 
 
 def needs_compaction(state: StreamingRSKPCA, max_fill: float = 0.9) -> bool:
@@ -76,16 +112,28 @@ def ingest(state: StreamingRSKPCA, xs, batch: int = 256,
     """
     xs = np.asarray(xs, np.float32)
     n = xs.shape[0]
+    obs_on = _om.enabled()
     for s in range(0, n, batch):
         blk = xs[s : s + batch]
         if needs_compaction(state):
-            state = compact(state)
-        if blk.shape[0] < batch:  # ragged tail: pad + mask, same compile
-            pad, ok = pad_block(blk, batch)
-            state = updates.ingest_batch(state, jnp.asarray(pad),
-                                         jnp.asarray(ok))
-        else:
-            state = updates.ingest_batch(state, jnp.asarray(blk))
+            with _span("stream.compact", m=state.m, cap=state.cap):
+                state = compact(state)
+            _M_COMPACTIONS.inc()
+        m_before = state.m if obs_on else 0
+        t0 = time.perf_counter() if obs_on else 0.0
+        with _span("stream.ingest_batch", rows=blk.shape[0]) as sp:
+            if blk.shape[0] < batch:  # ragged tail: pad + mask, same compile
+                pad, ok = pad_block(blk, batch)
+                state = updates.ingest_batch(state, jnp.asarray(pad),
+                                             jnp.asarray(ok))
+            else:
+                state = updates.ingest_batch(state, jnp.asarray(blk))
+            sp.sync(state.eigvals)  # span covers the device maintenance too
+        if obs_on:
+            _M_BATCHES.inc()
+            _M_ROWS.inc(blk.shape[0])
+            _M_BATCH_MS.observe((time.perf_counter() - t0) * 1e3)
+            _observe_batch(state, m_before, blk.shape[0])
         if detector is not None:
             detector.push(blk)
         if server is not None:

@@ -13,12 +13,24 @@ change (compaction/growth, logarithmically rare) re-traces, once per bucket.
 """
 from __future__ import annotations
 
+import time
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kernel_ops
 from repro.kernels import quantize
+from repro.obs import metrics as _om
+from repro.obs.trace import span as _span
 from repro.streaming.state import StreamingRSKPCA
+
+# publish/serve telemetry (DESIGN.md §16): how often the operator turns
+# over, what a publish costs (the quantization pass on int8/fp8 tiers),
+# and how stale the snapshot a query just saw was.
+_M_PUBLISHES = _om.counter("swap.publishes")
+_M_PUB_MS = _om.histogram("swap.publish_ms")
+_M_AGE = _om.gauge("swap.snapshot_age_s")
+_M_TRANSFORMS = _om.counter("swap.transforms")
 
 
 class HotSwapServer:
@@ -36,6 +48,9 @@ class HotSwapServer:
         self.version = 0
         # (centers, projector, kernel, projector_q), swapped whole
         self._snapshot = None
+        #: monotonic timestamp of the last publish; transform reports the
+        #: served snapshot's age off it (``swap.snapshot_age_s``)
+        self.published_at: float | None = None
         if state is not None:
             self.publish(state)
 
@@ -49,15 +64,21 @@ class HotSwapServer:
         caches the (Aq, scales) pair in the swap tuple, so serves never pay
         per-batch quantization and in-flight batches keep the pair they
         already read."""
-        centers = jnp.asarray(state.centers)
-        projector = jnp.asarray(state.projector)
-        kernel = state.kernel
-        projector_q = (quantize.quantize_projector(projector,
-                                                   kernel.precision)
-                       if kernel.precision in quantize.QUANT_PRECISIONS
-                       else None)
-        self._snapshot = (centers, projector, kernel, projector_q)
+        t0 = time.monotonic()
+        with _span("swap.publish", version=self.version + 1):
+            centers = jnp.asarray(state.centers)
+            projector = jnp.asarray(state.projector)
+            kernel = state.kernel
+            projector_q = (quantize.quantize_projector(projector,
+                                                       kernel.precision)
+                           if kernel.precision in quantize.QUANT_PRECISIONS
+                           else None)
+            self._snapshot = (centers, projector, kernel, projector_q)
+        self.published_at = time.monotonic()
         self.version += 1
+        _M_PUBLISHES.inc()
+        _M_PUB_MS.observe((self.published_at - t0) * 1e3)
+        _M_AGE.set(0.0)  # a fresh snapshot: age restarts from zero
         return self.version
 
     @property
@@ -72,6 +93,10 @@ class HotSwapServer:
         # pair the new centers with the old projector
         snapshot = self._snapshot
         assert snapshot is not None, "publish() an operator before serving"
+        if _om.enabled():
+            _M_TRANSFORMS.inc()
+            if self.published_at is not None:  # age of the snapshot SERVED
+                _M_AGE.set(time.monotonic() - self.published_at)
         centers, projector, kernel, projector_q = snapshot
         if mesh is not None:
             from repro.core import distributed as dist

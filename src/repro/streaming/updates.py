@@ -37,9 +37,17 @@ import jax.numpy as jnp
 from repro.core import mmd as mmd_mod
 from repro.core.rskpca import _canonicalize_signs
 from repro.kernels import ops as kernel_ops
+from repro.obs import metrics as _om
 from repro.streaming.state import StreamingRSKPCA, _solve
 
 Array = jax.Array
+
+# update-kind telemetry: counted in the HOST wrappers below (the jitted
+# bodies are never instrumented — obs must not alter compiled programs).
+# Batched absorb/insert tallies live in ingest.py, which sees the state
+# delta; remove/replace are explicit API calls and count here.
+_M_REMOVES = _om.counter("stream.updates", {"kind": "remove"})
+_M_REPLACES = _om.counter("stream.updates", {"kind": "replace"})
 
 
 # --------------------------------------------------------------------------
@@ -179,7 +187,6 @@ def insert(state: StreamingRSKPCA, x) -> StreamingRSKPCA:
     return ingest_batch(state, jnp.asarray(x, jnp.float32)[None, :])
 
 
-@jax.jit
 def remove(state: StreamingRSKPCA, j) -> StreamingRSKPCA:
     """Delete center j: its mass leaves the substitute density entirely —
     the paper's 'remove samples with minimal effect' (§5), with the effect
@@ -187,6 +194,12 @@ def remove(state: StreamingRSKPCA, j) -> StreamingRSKPCA:
     and REFUSED (no-op) when center j holds all remaining mass: an operator
     with n = 0 is undefined (every normalization divides by n), so the last
     live center can only leave via ``replace``."""
+    _M_REMOVES.inc()
+    return _remove_jit(state, j)
+
+
+@jax.jit
+def _remove_jit(state: StreamingRSKPCA, j) -> StreamingRSKPCA:
     j = jnp.asarray(j, jnp.int32)
     wcj, wfj = state.wcount[j], state.wfrac[j]
     w_j = wcj.astype(jnp.float32) + wfj
@@ -205,11 +218,16 @@ def remove(state: StreamingRSKPCA, j) -> StreamingRSKPCA:
                      jnp.int32(1))
 
 
-@jax.jit
 def replace(state: StreamingRSKPCA, j, x) -> StreamingRSKPCA:
     """Swap center j's location for ``x`` (unit mass), composing the remove
     and insert bounds — the paper's substitute-sample operation done in
     place, one fused Gram-row pass."""
+    _M_REPLACES.inc()
+    return _replace_jit(state, j, x)
+
+
+@jax.jit
+def _replace_jit(state: StreamingRSKPCA, j, x) -> StreamingRSKPCA:
     kernel = state.kernel
     j = jnp.asarray(j, jnp.int32)
     x = jnp.asarray(x, jnp.float32)

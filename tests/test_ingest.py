@@ -1,6 +1,8 @@
 """Out-of-core ingestion pipeline (DESIGN.md §9): chunked-source
 determinism, streaming-merge weight exactness, prefetch-feed behavior, and
 select->fit equivalence against the in-memory paths."""
+import time
+
 import numpy as np
 import pytest
 
@@ -198,3 +200,37 @@ def test_ingest_fit_multichunk_end_to_end():
     assert stats.rows_per_s > 0
     z = model.transform(src.rows(0, 100))
     assert z.shape == (100, 6) and np.isfinite(z).all()
+
+
+def test_overlap_fraction_edge_cases():
+    """The overlap metric must stay in [0, 1] at the degenerate corners:
+    an all-cached feed (feed_s == 0) counts as fully hidden, and a stall
+    measured LONGER than the feed work (clock skew between the producer
+    and consumer threads) clips to 0 instead of going negative."""
+    assert IngestStats(feed_s=0.0, stall_s=0.0).overlap_fraction == 1.0
+    assert IngestStats(feed_s=0.0, stall_s=0.5).overlap_fraction == 1.0
+    assert IngestStats(feed_s=1.0, stall_s=2.0).overlap_fraction == 0.0
+    assert IngestStats(feed_s=2.0, stall_s=0.5).overlap_fraction \
+        == pytest.approx(0.75)
+
+
+def test_prefetch_feed_excludes_queue_blocking_from_feed_s():
+    """feed_s is producer WORK, not producer waiting: with an instant
+    source and a slow consumer, the producer spends almost all its wall
+    time blocked on the full queue, and none of that may count as feed
+    time (else overlap_fraction would read ~0 for a pipeline whose feed is
+    actually infinitely ahead of compute)."""
+    stats = IngestStats()
+    items = [(np.zeros((4, 2), np.float32), 4) for _ in range(8)]
+    feed = _PrefetchFeed(iter(items), lambda x, nv: (x, nv), stats, depth=2)
+    consumer_s = 0.0
+    n_out = 0
+    for _ in feed:
+        t0 = time.perf_counter()
+        time.sleep(0.05)  # slow consumer: the queue stays full
+        consumer_s += time.perf_counter() - t0
+        n_out += 1
+    assert n_out == 8 and consumer_s > 0.3
+    # producer was blocked ~consumer_s total; its recorded work is tiny
+    assert stats.feed_s < 0.5 * consumer_s
+    assert stats.feed_s < 0.1
