@@ -1,7 +1,7 @@
 PYTHONPATH := src
 
 .PHONY: test bench bench-smoke bench-shard bench-stream bench-serve \
-	bench-ingest bench-ingest-full bench-methods bench-obs
+	bench-ingest bench-ingest-full bench-methods bench-obs bench-chaos
 
 # the tier-1 gate — CI and humans run the SAME command (ROADMAP.md)
 test:
@@ -66,3 +66,12 @@ bench-methods:
 # both the 2% budget and the run's own A/A noise floor
 bench-obs:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --obs
+
+# fault tolerance (DESIGN.md §17): the same ingest + serving workloads
+# fault-free vs under a deterministic ~1% chaos plan.  Appends mode=chaos
+# rows to BENCH_rskpca.json; fails unless faulted ingest (checkpointing on)
+# is BIT-EXACT vs fault-free at <= 1.5x slowdown, and faulted serving holds
+# p99 <= 2x fault-free with zero non-shed drops and a finite degraded-mode
+# staleness bound
+bench-chaos:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --chaos

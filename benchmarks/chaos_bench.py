@@ -1,0 +1,240 @@
+"""Chaos gate — ``mode="chaos"`` rows of BENCH_rskpca.json (DESIGN.md §17).
+
+Runs the SAME ingest and serving workloads twice — fault-free, then under a
+deterministic ``runtime.chaos`` fault plan — and gates on the two promises
+the fault-tolerance layer makes:
+
+  * **ingest**: with ~1% of chunk-read / feed-stage / merge calls throwing
+    transient faults (plus periodic checkpointing enabled), the selected
+    centers and f64 masses must be BIT-EXACT equal to the fault-free run's
+    (retries wrap pure regeneration, never partially-applied mutations),
+    at <= ``CHAOS_INGEST_SLOWDOWN_MAX`` wall-clock slowdown;
+  * **serve**: with ~1% of dispatches throwing a transient on first try,
+    per-dispatch p99 must stay within ``CHAOS_SERVE_P99_RATIO_MAX`` of the
+    fault-free p99 (sub-millisecond deterministic backoff — a retry costs
+    one extra service time, not a scheduler round-trip), and EVERY request
+    must resolve: zero drops that are not explicit ``RequestShed``
+    admission rejections.  The row also records the finite Theorem-5.x
+    staleness bound a degraded (failed-publish) server reports — the error
+    budget of serving stale instead of serving nothing.
+
+Fault triggering is a pure function of (plan seed, site, call#), so a gate
+failure replays bit-identically under ``pytest`` or a debugger.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.rskpca_scale import BENCH_JSON, _merge_into_bench
+
+#: Ingest wall-clock budget under the 1% fault plan (retry backoffs plus
+#: checkpoint publishes included).
+CHAOS_INGEST_SLOWDOWN_MAX = 1.5
+#: Faulted-serving p99 budget relative to fault-free p99.
+CHAOS_SERVE_P99_RATIO_MAX = 2.0
+
+_INGEST_N = 16384
+_INGEST_CHUNK = 1024
+
+_DISPATCHES = 300
+_REQS_PER_DISPATCH = 4
+_REQ_ROWS = 4
+_FAULT_P = 0.01
+
+
+def _ingest_once(eps: float, plan=None, checkpoint_dir: str | None = None):
+    """One select_streaming pass; returns (rsde, wall_s, injected)."""
+    from repro.core.ingest_pipeline import select_streaming
+    from repro.data.kpca_datasets import ChunkedDataset
+    from repro.runtime import chaos
+
+    src = ChunkedDataset("pendigits", n=_INGEST_N, chunk=_INGEST_CHUNK,
+                         seed=0)
+    injected = 0
+    t0 = time.perf_counter()
+    if plan is None:
+        rsde, stats = select_streaming(src, eps, block=256, budget=2048)
+    else:
+        with chaos.active(plan) as p:
+            rsde, stats = select_streaming(
+                src, eps, block=256, budget=2048,
+                checkpoint_dir=checkpoint_dir, checkpoint_every=4)
+            injected = sum(p.stats()["injected"].values())
+    wall = time.perf_counter() - t0
+    assert stats.rows == _INGEST_N
+    return rsde, wall, injected
+
+
+def bench_chaos_ingest() -> dict:
+    from repro.data.kpca_datasets import ChunkedDataset
+    from repro.runtime.chaos import FaultPlan, FaultSpec
+
+    sigma = ChunkedDataset("pendigits", n=_INGEST_N, chunk=_INGEST_CHUNK,
+                           seed=0).bandwidth()
+    eps = sigma / 4.0
+    _ingest_once(eps)  # warmup: compile the select/merge programs
+    ref, wall_ff, _ = _ingest_once(eps)
+
+    # ~1% transient-fault rate across the three ingest sites (crc-keyed
+    # coin flips: identical fire pattern on every run/box), plus one
+    # GUARANTEED fault per site (``at=(2,)``) so a short fast-mode run can
+    # never vacuously pass with zero injections
+    fault = FaultSpec(kind="transient", p=_FAULT_P, at=(2,))
+    plan = FaultPlan({"data.chunk": fault, "ingest.feed": fault,
+                      "ingest.merge": fault}, seed=1)
+    with tempfile.TemporaryDirectory() as ckdir:
+        got, wall_chaos, injected = _ingest_once(eps, plan=plan,
+                                                 checkpoint_dir=ckdir)
+
+    bit_exact = bool(
+        np.array_equal(np.asarray(ref.centers), np.asarray(got.centers))
+        and np.array_equal(np.asarray(ref.weights), np.asarray(got.weights)))
+    slowdown = wall_chaos / wall_ff
+    row = dict(n=_INGEST_N, mode="chaos", method="ingest",
+               bit_exact=bit_exact, injected=int(injected),
+               wall_ff_s=round(wall_ff, 3),
+               wall_chaos_s=round(wall_chaos, 3),
+               slowdown=round(slowdown, 3),
+               slowdown_max=CHAOS_INGEST_SLOWDOWN_MAX)
+    emit("rskpca_chaos_ingest", wall_chaos * 1e6,
+         bit_exact=int(bit_exact), slowdown=row["slowdown"],
+         injected=int(injected))
+    return row
+
+
+def _serve_lats_ms(srv, d: int, plan=None) -> tuple[np.ndarray, int, int]:
+    """Step-driven per-dispatch latencies (ms) + (unresolved, shed)."""
+    from repro.runtime import chaos
+    from repro.runtime.fault import RetryPolicy
+    from repro.serving.batching import BatchingFrontEnd, RequestShed
+
+    rng = np.random.default_rng(11)
+    reqs = [(rng.normal(size=(_REQ_ROWS, d)) * 2.0).astype(np.float32)
+            for _ in range(_REQS_PER_DISPATCH)]
+    # sub-ms deterministic backoff: a retried dispatch costs ~one extra
+    # service time, which is what keeps the p99 ratio near 2 and not 10
+    fe = BatchingFrontEnd(srv, max_batch=256, slo_ms=5000.0,
+                          autostart=False,
+                          retry=RetryPolicy(base_s=2e-4, max_s=2e-3))
+    lat = np.empty(_DISPATCHES)
+    unresolved = shed = 0
+
+    def run():
+        nonlocal unresolved, shed
+        for k in range(_DISPATCHES):
+            futs = [fe.submit(x) for x in reqs]
+            t0 = time.perf_counter()
+            fe.step()
+            lat[k] = time.perf_counter() - t0
+            for f in futs:
+                try:
+                    f.result(timeout=60)
+                except RequestShed:
+                    shed += 1
+                except Exception:
+                    unresolved += 1
+
+    if plan is None:
+        run()
+    else:
+        with chaos.active(plan):
+            run()
+    fe.close()
+    return lat * 1e3, unresolved, shed
+
+
+def bench_chaos_serve(m: int = 512, d: int = 16, rank: int = 8) -> dict:
+    from benchmarks.serve_latency import _build_server, _warm_buckets
+    from repro.runtime import chaos
+    from repro.runtime.chaos import FaultPlan, FaultSpec
+
+    srv = _build_server(m, d, rank)
+    _warm_buckets(srv, d, _REQ_ROWS, 256)
+    _serve_lats_ms(srv, d)  # warmup
+
+    lat_ff, drop_ff, _ = _serve_lats_ms(srv, d)
+    plan = FaultPlan(
+        {"serve.dispatch": FaultSpec(kind="transient", p=_FAULT_P,
+                                     at=(7,))}, seed=2)
+    lat_ch, drop_ch, _ = _serve_lats_ms(srv, d, plan=plan)
+    injected = plan.stats()["total_injected"]
+
+    p99_ff = float(np.percentile(lat_ff, 99))
+    p99_ch = float(np.percentile(lat_ch, 99))
+
+    # admission control under burst: everything beyond max_queue sheds
+    # with an explicit RequestShed, everything admitted resolves
+    from repro.runtime.fault import RetryPolicy
+    from repro.serving.batching import BatchingFrontEnd, RequestShed
+    fe = BatchingFrontEnd(srv, max_batch=256, slo_ms=5000.0,
+                          autostart=False, max_queue=8,
+                          retry=RetryPolicy(base_s=2e-4, max_s=2e-3))
+    burst = [fe.submit(np.zeros((_REQ_ROWS, d), np.float32))
+             for _ in range(24)]
+    fe.drain()
+    fe.close()
+    shed = served = lost = 0
+    for f in burst:
+        try:
+            f.result(timeout=60)
+            served += 1
+        except RequestShed:
+            shed += 1
+        except Exception:
+            lost += 1
+
+    # degraded serving: a failed publish falls back to the last good
+    # snapshot and prices it with the finite Theorem-5.x staleness bound
+    with chaos.active(FaultPlan(
+            {"swap.publish": FaultSpec(kind="error", every=1)}, seed=3)):
+        srv.try_publish(srv_state(srv))
+    info = srv.degraded_info()
+    z = srv.transform(np.zeros((_REQ_ROWS, d), np.float32))
+    assert z.shape[0] == _REQ_ROWS, "degraded server stopped serving"
+    srv.try_publish(srv_state(srv))  # recover for any later bench
+
+    row = dict(n=_DISPATCHES, mode="chaos", method="serve",
+               injected=int(injected),
+               p99_ff_ms=round(p99_ff, 3), p99_chaos_ms=round(p99_ch, 3),
+               p99_ratio=round(p99_ch / p99_ff, 3),
+               p99_ratio_max=CHAOS_SERVE_P99_RATIO_MAX,
+               dropped=int(drop_ff + drop_ch + lost), shed=int(shed),
+               burst_served=int(served),
+               staleness_bound=float(info.staleness_bound),
+               degraded=bool(info.degraded))
+    emit("rskpca_chaos_serve", p99_ch * 1e3, p99_ratio=row["p99_ratio"],
+         dropped=row["dropped"], shed=row["shed"],
+         staleness_bound=round(row["staleness_bound"], 6))
+    return row
+
+
+def srv_state(srv):
+    """The serving state a publish would re-publish (bench convenience:
+    rebuild an equivalent state from the live snapshot)."""
+    from repro import streaming
+    from repro.core.rsde import RSDE
+
+    centers, projector, kernel, _ = srv._snapshot
+    w = (np.asarray(srv._pub_weights) if srv._pub_weights is not None
+         else np.ones(np.asarray(centers).shape[0]))
+    alive = w > 0
+    rsde = RSDE(np.asarray(centers)[alive], w[alive], n=float(w.sum()),
+                scheme="bench")
+    rank = np.asarray(projector).shape[1]
+    return streaming.from_rsde(rsde, kernel, rank, eps=0.4,
+                               cap=np.asarray(centers).shape[0])
+
+
+def bench_chaos(fast: bool = True):
+    rows = [bench_chaos_ingest(), bench_chaos_serve()]
+    _merge_into_bench(rows)
+    print(f"# appended chaos rows to {BENCH_JSON}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    bench_chaos()

@@ -195,6 +195,44 @@ def _assert_obs_gate() -> None:
           f"{[r['aa_delta_frac'] for r in fresh]})", flush=True)
 
 
+def _assert_chaos_gate() -> None:
+    """Acceptance gates for the fault-tolerance layer (DESIGN.md §17):
+
+    * the ingest chaos row must be BIT-EXACT against its fault-free twin
+      (faults injected > 0, or the run proved nothing) at <= 1.5x slowdown
+      with checkpointing on;
+    * the serve chaos row must keep faulted p99 within 2x of fault-free,
+      drop ZERO requests that were not explicit RequestShed admissions,
+      and report a finite staleness bound from the degraded-publish path.
+    """
+    import json
+    import math
+    from benchmarks.chaos_bench import (CHAOS_INGEST_SLOWDOWN_MAX,
+                                        CHAOS_SERVE_P99_RATIO_MAX)
+    from benchmarks.rskpca_scale import BENCH_JSON
+    with open(BENCH_JSON) as f:
+        rows = json.load(f)["rows"]
+    fresh = [r for r in rows
+             if r.get("mode") == "chaos" and not r.get("stale")]
+    ing = [r for r in fresh if r["method"] == "ingest"]
+    srv = [r for r in fresh if r["method"] == "serve"]
+    assert ing and srv, f"expected ingest + serve chaos rows, got {fresh}"
+    bad = [r for r in ing
+           if not r["bit_exact"] or r["injected"] < 1
+           or r["slowdown"] > CHAOS_INGEST_SLOWDOWN_MAX]
+    assert not bad, f"chaos ingest gate failed: {bad}"
+    bad = [r for r in srv
+           if r["p99_ratio"] > CHAOS_SERVE_P99_RATIO_MAX
+           or r["dropped"] != 0 or r["injected"] < 1
+           or not r["degraded"] or not math.isfinite(r["staleness_bound"])]
+    assert not bad, f"chaos serve gate failed: {bad}"
+    print(f"# chaos gate passed: ingest bit-exact at "
+          f"{ing[0]['slowdown']}x ({ing[0]['injected']} faults), serve "
+          f"p99 ratio {srv[0]['p99_ratio']} with {srv[0]['shed']} shed / "
+          f"0 dropped, staleness bound {srv[0]['staleness_bound']:.4g}",
+          flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -244,6 +282,14 @@ def main() -> None:
                          "and fails on the rows/s floor, overlap_fraction "
                          "< 0.5, or (n=10M) peak host memory >= 25% of "
                          "the dataset footprint")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-tolerance bench: the same ingest + serving "
+                         "workloads fault-free vs under a deterministic "
+                         "~1% fault plan; appends mode=chaos rows to "
+                         "BENCH_rskpca.json and fails unless the faulted "
+                         "ingest is bit-exact at <= 1.5x slowdown and "
+                         "faulted serving holds p99 <= 2x with zero "
+                         "non-shed drops and a finite staleness bound")
     ap.add_argument("--obs", action="store_true",
                     help="telemetry-overhead bench: interleaved A/B/A of "
                          "obs-enabled vs disabled on the serving dispatch "
@@ -285,6 +331,14 @@ def main() -> None:
         print("# --- method zoo (nystrom / wnystrom / rff) ---", flush=True)
         methods_bench.main(fast=fast)
         _assert_methods_gate()
+        if not args.smoke and not args.serve:
+            return
+
+    if args.chaos:
+        from benchmarks import chaos_bench
+        print("# --- fault tolerance (chaos vs fault-free) ---", flush=True)
+        chaos_bench.bench_chaos(fast=fast)
+        _assert_chaos_gate()
         if not args.smoke and not args.serve:
             return
 

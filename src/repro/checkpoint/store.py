@@ -7,27 +7,50 @@ Layout:
                              "<leaf_idx>/<shard_idx>" with index metadata
     <dir>/LATEST             published last -> restart never sees a torn ckpt
 
-Fault-tolerance contract (DESIGN.md §11):
+Fault-tolerance contract (DESIGN.md §11/§17):
   * atomic publish: write into step_<N>.tmp, fsync, rename, then update LATEST;
+  * every shard file carries a crc32 in meta.json, verified on restore —
+    bit-rot or a torn write raises :class:`CheckpointCorrupt` instead of
+    silently restoring garbage (chaos-tested via the ``checkpoint.shard``
+    corrupt site); resumers fall back through :func:`available_steps`;
   * restore is sharding-agnostic: leaves are reassembled on the host and
     re-placed under ANY target mesh/sharding -> elastic restarts onto a
-    smaller/larger mesh work (tested in tests/test_checkpoint.py);
-  * async: a single worker thread serializes saves; `wait()` joins before the
-    next save or program exit so at most one save is in flight.
+    smaller/larger mesh work (tested in tests/test_checkpoint.py); a leaf
+    whose template in ``tree_like`` is a NUMPY array restores as numpy with
+    its saved dtype intact (float64 ingest masses must not round through
+    jnp's default f32);
+  * async: a single worker thread serializes saves; `wait()` joins before
+    the next save, and an ``atexit`` hook joins any in-flight save on
+    interpreter exit — a daemon worker must never be killed mid-write.
+
+Chaos injection sites (runtime/chaos.py): ``checkpoint.save`` fires before
+the step-directory rename (a crash mid-publish: tmp left behind, LATEST
+untouched), ``checkpoint.latest`` before the LATEST pointer swap (step
+published but not pointed at), ``checkpoint.shard`` corrupts shard bytes
+after the crc is recorded (bit-rot the crc check must catch).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import shutil
 import threading
+import weakref
+import zlib
 from typing import Any
 
 import jax
 import ml_dtypes
 import numpy as np
 
+from repro.runtime import chaos
+
 PyTree = Any
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A shard file's bytes do not match the crc recorded at save time."""
 
 # numpy .npz cannot store ml_dtypes (bfloat16, float8_*): serialize them as
 # a same-width integer view and restore via the recorded dtype string.
@@ -90,12 +113,26 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
         meta["leaves"].append(entry)
 
     host = jax.process_index() if jax.process_count() > 1 else 0
-    np.savez(os.path.join(tmp, f"shard_{host}.npz"), **shards)
+    shard_name = f"shard_{host}.npz"
+    shard_path = os.path.join(tmp, shard_name)
+    np.savez(shard_path, **shards)
+    # crc the exact bytes just written; restore refuses a mismatch.  The
+    # chaos corrupt site fires AFTER the crc is recorded — modelling rot
+    # between write and read, which is precisely what the crc must catch.
+    with open(shard_path, "rb") as f:
+        raw = np.frombuffer(f.read(), np.uint8)
+    meta["crc"] = {shard_name: zlib.crc32(raw.tobytes())}
+    rotted = chaos.corrupt("checkpoint.shard", raw)
+    if rotted is not raw:
+        with open(shard_path, "wb") as f:
+            f.write(rotted.tobytes())
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    chaos.inject("checkpoint.save")   # crash before publish: tmp left over
     if os.path.exists(final):  # idempotent same-step re-save
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic on POSIX
+    chaos.inject("checkpoint.latest")  # crash between publish and pointer
     with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
         f.write(str(step))
         f.flush()
@@ -111,6 +148,25 @@ def latest_step(directory: str) -> int | None:
         return None
     with open(path) as f:
         return int(f.read().strip())
+
+
+def available_steps(directory: str) -> list[int]:
+    """All PUBLISHED step numbers under ``directory``, ascending.
+
+    ``step_<N>.tmp`` leftovers (a save that crashed before its rename) are
+    by construction excluded — a resumer walking this list newest-first and
+    falling back on :class:`CheckpointCorrupt` always lands on the newest
+    intact checkpoint, even when LATEST points at a rotted one.
+    """
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and os.path.isfile(os.path.join(directory, name,
+                                                "meta.json")):
+            steps.append(int(name[len("step_"):]))
+    return sorted(steps)
 
 
 def restore_checkpoint(directory: str, tree_like: PyTree,
@@ -129,7 +185,17 @@ def restore_checkpoint(directory: str, tree_like: PyTree,
     buffers: dict[str, np.ndarray] = {}
     for fname in sorted(os.listdir(final)):
         if fname.startswith("shard_") and fname.endswith(".npz"):
-            with np.load(os.path.join(final, fname)) as z:
+            path = os.path.join(final, fname)
+            want = meta.get("crc", {}).get(fname)
+            if want is not None:
+                with open(path, "rb") as f:
+                    got = zlib.crc32(f.read())
+                if got != want:
+                    raise CheckpointCorrupt(
+                        f"{path}: crc {got:#x} != recorded {want:#x} — "
+                        f"torn or rotted shard; fall back via "
+                        f"available_steps()")
+            with np.load(path) as z:
                 buffers.update({k: z[k] for k in z.files})
 
     paths, leaves, treedef = _tree_paths(tree_like)
@@ -152,6 +218,11 @@ def restore_checkpoint(directory: str, tree_like: PyTree,
             full = _decode(buffers[f"{li}/0"], entry["dtype"])
         if shard_leaves[li] is not None:
             out.append(jax.device_put(full, shard_leaves[li]))
+        elif isinstance(leaves[li], np.ndarray):
+            # numpy template -> numpy restore, saved dtype INTACT: routing
+            # float64 through jnp.asarray would silently round the ingest
+            # pipeline's weight-exact f64 masses to f32 (x64 is off)
+            out.append(full)
         else:
             out.append(jax.numpy.asarray(full))
     return jax.tree_util.tree_unflatten(treedef, out), step
@@ -159,11 +230,21 @@ def restore_checkpoint(directory: str, tree_like: PyTree,
 
 class AsyncCheckpointer:
     """One background save in flight at a time; device->host copy happens on
-    the caller thread (cheap), serialization/IO on the worker."""
+    the caller thread (cheap), serialization/IO on the worker.
+
+    The worker is a daemon thread, and daemon threads are KILLED mid-write
+    when the interpreter exits — a save racing process exit would leave a
+    truncated ``step_<N>.tmp`` (never published, but the work is lost) or,
+    worse, die between its fsync and rename.  Every live checkpointer
+    therefore registers in a module-level WeakSet joined by an ``atexit``
+    hook: atexit runs BEFORE daemon threads are reaped, so an in-flight
+    save always completes its atomic publish (tests/test_checkpoint.py
+    races a save against ``sys.exit`` in a subprocess)."""
 
     def __init__(self, directory: str):
         self.directory = directory
         self._thread: threading.Thread | None = None
+        _LIVE_CHECKPOINTERS.add(self)
 
     def save(self, step: int, tree: PyTree, extra_meta: dict | None = None):
         self.wait()
@@ -179,3 +260,15 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+
+_LIVE_CHECKPOINTERS: "weakref.WeakSet[AsyncCheckpointer]" = weakref.WeakSet()
+
+
+@atexit.register
+def _join_in_flight_saves() -> None:
+    for ckpt in list(_LIVE_CHECKPOINTERS):
+        try:
+            ckpt.wait()
+        except Exception:  # joining must never turn exit into a traceback
+            pass

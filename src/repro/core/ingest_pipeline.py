@@ -41,8 +41,16 @@ from repro.core.rsde import RSDE
 from repro.core.shadow import StreamingMerge
 from repro.obs import metrics as _om
 from repro.obs.trace import span as _span
+from repro.runtime import chaos
+from repro.runtime.fault import Preempted, RetryPolicy, retry_call
 
 Array = jax.Array
+
+# fault-path telemetry (DESIGN.md §17): how often the pipeline had to
+# recover, and what a preemption/resume cost.
+_M_CKPTS = _om.counter("ingest.checkpoints")
+_M_RESUMES = _om.counter("ingest.resumes")
+_M_STRAGGLERS = _om.counter("ingest.stragglers")
 
 # pipeline telemetry (DESIGN.md §16): the IngestStats fields double as LIVE
 # gauges, refreshed per chunk — a 10M-row run is observable while it runs,
@@ -129,12 +137,23 @@ class _PrefetchFeed:
     full queue means the feed is AHEAD, not working); consumer blocking on
     ``get`` accrues to ``stall_s``.  Producer exceptions re-raise at the
     consumer's next pull, so a failing source can't hang the pipeline.
+
+    Fault model (DESIGN.md §17): ``ingest.feed`` is the chaos injection
+    site for the staging step — transient faults are retried in place
+    (``place`` is a pure device_put of an already-generated host chunk),
+    delays model a straggling feed thread (what the consumer-side watchdog
+    flags), permanent faults propagate as before.  ``close()`` gives the
+    consumer a CLEAN early exit (preemption drain, consumer-side error):
+    the producer stops at its next chunk boundary and the thread is
+    joined, so no orphan thread keeps staging chunks onto a device the
+    resumed process wants.
     """
 
     def __init__(self, it, place, stats: IngestStats, depth: int = 2):
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth - 1))
         self._stats = stats
         self._err: BaseException | None = None
+        self._stop = threading.Event()
         self._t = threading.Thread(
             target=self._run, args=(iter(it), place), daemon=True)
         self._t.start()
@@ -142,24 +161,48 @@ class _PrefetchFeed:
     def _run(self, it, place):
         try:
             k = 0
-            while True:
+            while not self._stop.is_set():
                 t0 = time.perf_counter()
                 with _span("ingest.feed_chunk", chunk=k):
                     try:
                         item = next(it)
                     except StopIteration:
                         break
-                    staged = place(*item)
+
+                    def stage():
+                        chaos.inject("ingest.feed")
+                        return place(*item)
+
+                    staged = retry_call(stage, key=f"feed{k}")
                 # feed_s stops HERE: time blocked on a full queue below is
                 # the feed being AHEAD of compute, not the feed working
                 # (asserted by the slow-consumer test in tests/test_ingest)
                 self._stats.feed_s += time.perf_counter() - t0
                 k += 1
-                self._q.put(staged)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(staged, timeout=0.05)
+                        break
+                    except queue.Full:  # consumer slow or gone: re-check stop
+                        continue
         except BaseException as e:  # re-raised on the consumer side
             self._err = e
         finally:
             self._q.put(_END)
+
+    def close(self) -> None:
+        """Stop the producer at its next boundary and join it (drains the
+        queue so a producer blocked on put can finish)."""
+        self._stop.set()
+        while True:
+            try:
+                if self._q.get_nowait() is _END:
+                    break
+            except queue.Empty:
+                if not self._t.is_alive():
+                    break
+                time.sleep(0.005)
+        self._t.join()
 
     def __iter__(self):
         while True:
@@ -174,14 +217,58 @@ class _PrefetchFeed:
             yield item
 
 
-def _chunk_iter(source):
-    """``.chunks()`` protocol or a bare iterable of (x, n_valid)."""
-    return source.chunks() if hasattr(source, "chunks") else iter(source)
+def _chunk_iter(source, start: int = 0):
+    """``.chunks()`` protocol or a bare iterable of (x, n_valid).
+
+    ``start`` is the resume cursor: sources implementing ``chunks(start=)``
+    (``data.ChunkedDataset``) seek for free; bare iterables are skipped
+    item-by-item (correct, just not cheap — a resumable source should seek).
+    """
+    if hasattr(source, "chunks"):
+        try:
+            return source.chunks(start=start)
+        except TypeError:  # a chunks() without resume support
+            it = source.chunks()
+    else:
+        it = iter(source)
+    import itertools
+    return itertools.islice(it, start, None)
+
+
+#: Ingest-checkpoint schema: what select_streaming persists per cursor.
+#: The chunk source contributes NOTHING to the checkpoint — a
+#: ``ChunkedDataset`` is a seed, so its "RNG state" is exactly the cursor.
+def _ckpt_template(d: int) -> dict:
+    return {
+        "merge": StreamingMerge(d, 1.0).state_template(),
+        "cursor": np.asarray(0, np.int64),      # chunks fully ingested
+        "rows": np.asarray(0, np.int64),        # valid rows ingested
+        "chunks": np.asarray(0, np.int64),      # == cursor (stats mirror)
+    }
+
+
+def _ckpt_restore(checkpoint_dir: str, d: int):
+    """Newest intact ingest checkpoint, walking back over corrupt/torn
+    steps (store.CheckpointCorrupt) — the graceful-degradation path of the
+    checkpoint stack itself.  Returns ``(tree, step)`` or ``(None, None)``."""
+    from repro.checkpoint import store
+
+    for step in reversed(store.available_steps(checkpoint_dir)):
+        try:
+            tree, _ = store.restore_checkpoint(
+                checkpoint_dir, _ckpt_template(d), step=step)
+            return tree, step
+        except store.CheckpointCorrupt:
+            continue
+    return None, None
 
 
 def select_streaming(source, eps: float, *, block: int = 256,
                      budget: int | None = None, mesh=None,
-                     axis: str = "data", prefetch: int = 2):
+                     axis: str = "data", prefetch: int = 2,
+                     checkpoint_dir: str | None = None,
+                     checkpoint_every: int = 0, resume: bool = False,
+                     guard=None, watchdog=None):
     """Distributed out-of-core shadow selection over a chunk stream.
 
     Args:
@@ -195,6 +282,22 @@ def select_streaming(source, eps: float, *, block: int = 256,
         every device runs selection on its local rows; chunk size must then
         divide the axis size.
       prefetch: feed depth (chunks of host memory the pipeline may hold).
+      checkpoint_dir: enable crash consistency — every ``checkpoint_every``
+        chunks the (merge state, chunk cursor) pair publishes atomically
+        via ``checkpoint/store``; because the merge is the ONLY cross-chunk
+        state and a ``ChunkedDataset`` regenerates any chunk from its seed,
+        a resumed run is BIT-EXACT equal to an uninterrupted one (SIGKILL
+        subprocess test in tests/test_chaos.py).
+      checkpoint_every: checkpoint cadence in chunks (0 with a
+        ``checkpoint_dir`` still checkpoints on preemption).
+      resume: restore the newest intact checkpoint under ``checkpoint_dir``
+        (corrupt/torn steps are skipped) and continue from its cursor.
+      guard: optional ``runtime.PreemptionGuard`` — polled per chunk; on
+        SIGTERM the loop drains cleanly: final checkpoint, producer thread
+        joined, then raises ``runtime.Preempted`` with the resume step.
+      watchdog: optional ``runtime.StepWatchdog`` wrapping each chunk's
+        pull+select+merge — a straggling feed (slow disk, injected delay)
+        flags here and counts into ``ingest.stragglers``.
 
     Returns ``(RSDE(scheme="shadow-ingest"), IngestStats)``.  Weights are
     float64 and sum EXACTLY to the number of ingested rows; cover radius is
@@ -221,8 +324,55 @@ def select_streaming(source, eps: float, *, block: int = 256,
             return jax.device_put(x), jax.device_put(ok), int(n_valid)
 
     merge: StreamingMerge | None = None
-    for xd, okd, n_valid in _PrefetchFeed(_chunk_iter(source), place, stats,
-                                          depth=prefetch):
+    cursor = 0  # chunks FULLY ingested == resume start == checkpoint step
+    if resume and checkpoint_dir is not None:
+        d = getattr(source, "d", None)
+        assert d is not None, \
+            "resume requires a source exposing .d (e.g. ChunkedDataset) — " \
+            "a bare iterable cannot be replayed from a cursor"
+        tree, ck_step = _ckpt_restore(checkpoint_dir, int(d))
+        if tree is not None:
+            merge = StreamingMerge(int(d), eps, budget=budget, block=block)
+            merge.load_state(tree["merge"])
+            cursor = int(tree["cursor"])
+            stats.chunks = int(tree["chunks"])
+            stats.rows = int(tree["rows"])
+            stats.m = merge.m
+            if _om.enabled():
+                _M_RESUMES.inc()
+
+    def _save_ckpt() -> None:
+        """Atomic-publish the full cross-chunk state at the current cursor.
+
+        The merge state is the ONLY accumulator and ``cursor`` replays the
+        source (row i of a ChunkedDataset depends only on (name, seed, i)),
+        so this pair IS crash consistency: resume == uninterrupted, bitwise.
+        """
+        from repro.checkpoint import store
+        tree = {"merge": merge.state(),
+                "cursor": np.asarray(cursor, np.int64),
+                "rows": np.asarray(stats.rows, np.int64),
+                "chunks": np.asarray(stats.chunks, np.int64)}
+        store.save_checkpoint(
+            checkpoint_dir, cursor, tree,
+            extra_meta={"eps": float(eps), "budget": budget, "block": block})
+        if _om.enabled():
+            _M_CKPTS.inc()
+
+    feed = _PrefetchFeed(_chunk_iter(source, start=cursor), place, stats,
+                         depth=prefetch)
+    for xd, okd, n_valid in feed:
+        if guard is not None and guard.should_stop:
+            # drain: persist at the last FULLY ingested chunk, stop the
+            # producer thread, and hand the resume step to the caller —
+            # the pulled-but-unprocessed chunk is regenerated on resume.
+            if checkpoint_dir is not None and merge is not None:
+                _save_ckpt()
+            feed.close()
+            raise Preempted(f"preempted at chunk {cursor}", step=cursor)
+        if watchdog is not None:
+            watchdog.start()
+            flags0 = len(watchdog.flags)
         t0 = time.perf_counter()
         with _span("ingest.select_chunk", chunk=stats.chunks,
                    rows=int(n_valid)):
@@ -239,20 +389,39 @@ def select_streaming(source, eps: float, *, block: int = 256,
             # np.asarray blocks until the device round finishes — compute_s
             # is true select+merge time, which is what overlap compares
             # feed_s to
-            with _span("ingest.merge"):
-                merge.update(np.asarray(c), np.asarray(w))
+            ch, wh = np.asarray(c), np.asarray(w)
+
+            def fold():
+                # inject BEFORE the non-idempotent merge.update: a
+                # transient here retries safely because the mutation has
+                # not happened yet on the failed attempt
+                chaos.inject("ingest.merge")
+                with _span("ingest.merge"):
+                    merge.update(ch, wh)
+
+            retry_call(fold, key=f"merge{cursor}")
+        cursor += 1
         stats.chunks += 1
         stats.rows += n_valid
         stats.compute_s += time.perf_counter() - t0
         stats.m = merge.m
+        if watchdog is not None:
+            watchdog.stop(cursor - 1)
+            if _om.enabled() and len(watchdog.flags) > flags0:
+                _M_STRAGGLERS.inc(len(watchdog.flags) - flags0)
         if _om.enabled():
             _M_CHUNKS.inc()
             _M_ROWS.inc(n_valid)
             _M_CHUNK_MS.observe((time.perf_counter() - t0) * 1e3)
             stats.spilled = merge.spilled
             _observe_chunk(stats)
+        if checkpoint_dir is not None and checkpoint_every \
+                and cursor % checkpoint_every == 0:
+            _save_ckpt()
     if merge is None:
         raise ValueError("empty source: no chunks to ingest")
+    if checkpoint_dir is not None:
+        _save_ckpt()  # final: a resume of a finished run is a no-op replay
     stats.select_s = time.perf_counter() - t_start
     stats.m = merge.m
     stats.spilled = merge.spilled
@@ -265,14 +434,21 @@ def select_streaming(source, eps: float, *, block: int = 256,
 def ingest_fit(source, kernel, rank: int, *, ell: float = 4.0,
                block: int = 256, budget: int | None = None, mesh=None,
                axis: str = "data", prefetch: int = 2,
-               matfree: bool | None = None):
+               matfree: bool | None = None,
+               checkpoint_dir: str | None = None,
+               checkpoint_every: int = 0, resume: bool = False,
+               guard=None, watchdog=None):
     """Single-pass out-of-core select -> fit: the n=10M front door.
 
     Streams ``source`` through ``select_streaming`` (eps = sigma/ell via
     ``kernel.epsilon``), then fits Algorithm 1 on the merged centers —
     ``pipeline.fit_centers`` on one device, the sharded/matrix-free fit when
     ``mesh`` is given.  Returns ``(KPCAModel, IngestStats)``; the dataset is
-    generated, staged, and read exactly once.
+    generated, staged, and read exactly once.  The fault-tolerance knobs
+    (``checkpoint_dir``/``checkpoint_every``/``resume``/``guard``/
+    ``watchdog``) pass straight through to ``select_streaming`` — the fit
+    itself is a pure function of the selected centers, so select-phase
+    crash consistency covers the whole front door.
     """
     from repro.core.pipeline import fit_centers
     from repro.core.rskpca import fit_rskpca
@@ -281,7 +457,10 @@ def ingest_fit(source, kernel, rank: int, *, ell: float = 4.0,
     with _span("ingest.select"):
         rsde, stats = select_streaming(
             source, kernel.epsilon(ell), block=block, budget=budget,
-            mesh=mesh, axis=axis, prefetch=prefetch)
+            mesh=mesh, axis=axis, prefetch=prefetch,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume,
+            guard=guard, watchdog=watchdog)
     t1 = time.perf_counter()
     with _span("ingest.fit", m=rsde.m) as sp:
         if mesh is None:

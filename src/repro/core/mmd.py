@@ -155,6 +155,43 @@ def remove_bound(n, w_j, kappa: float = 1.0):
     return weight_update_bound(n, n - w_j, w_j, 0.0, kappa)
 
 
+def staleness_bound(w_pub, w_cur, kappa: float = 1.0) -> float:
+    """Operator-drift bound of a STALE published snapshot (DESIGN.md §17).
+
+    The whole-vector generalization of :func:`weight_update_bound`: the
+    published operator carries masses ``w_pub`` (per center slot) while the
+    live state has drifted to ``w_cur``.  With s = sqrt(w) and unit vectors
+    a = s_cur/||s_cur||, b = s_pub/||s_pub||, the weight factor changes by
+    the rank-two matrix a a^T - b b^T, so with
+
+        t = a . b = sum_j sqrt(w_pub_j * w_cur_j) / sqrt(n_pub * n_cur)
+
+    the SAME identity gives ``||K'/n' - K/n||_F <= kappa sqrt(2 (1 - t^2))``.
+    Valid whenever slot j holds the same center position in both vectors —
+    exactly the ingest situation (absorption changes masses in place; a
+    fresh center lands in a previously-dead ``w_pub_j = 0`` slot, which the
+    formula prices like :func:`insert_bound`).  Vectors of different length
+    (capacity grew) are zero-padded to align.
+
+    This is what a degraded server reports when a publish FAILS and queries
+    keep flowing against the last good snapshot: the error budget of
+    serving stale, host-side and O(m) — cheap enough to refresh per failed
+    publish (``swap.staleness_bound`` gauge, ``SnapshotInfo``).
+    """
+    a = np.asarray(w_pub, np.float64).ravel()
+    b = np.asarray(w_cur, np.float64).ravel()
+    m = max(a.size, b.size)
+    if a.size < m:
+        a = np.concatenate([a, np.zeros(m - a.size)])
+    if b.size < m:
+        b = np.concatenate([b, np.zeros(m - b.size)])
+    n_pub, n_cur = float(a.sum()), float(b.sum())
+    if n_pub <= 0.0 or n_cur <= 0.0:
+        return float(kappa) * float(np.sqrt(2.0))  # no overlap information
+    t = float(np.sqrt(a * b).sum()) / float(np.sqrt(n_pub * n_cur))
+    return float(kappa) * float(np.sqrt(max(2.0 * (1.0 - t * t), 0.0)))
+
+
 def centroid_error_max(kernel: Kernel, x, x_quant) -> float:
     """max_i ||k_{x_i} - k_{c_alpha(i)}||_H = max_i sqrt(2(kappa - k(x_i, c_i')))."""
     x = jnp.asarray(x, jnp.float32)

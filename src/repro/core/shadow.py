@@ -350,6 +350,39 @@ class StreamingMerge:
     def weights(self) -> np.ndarray:
         return self._w
 
+    # -- crash-consistent state (DESIGN.md §17) ---------------------------
+    # The merge IS the only cross-chunk ingest state, so these two methods
+    # are the whole checkpoint/resume contract: state() -> a flat numpy
+    # tree checkpoint/store can publish atomically, load_state() -> the
+    # bit-identical merge (f32 centers and f64 masses round-trip exactly;
+    # the store's numpy-template restore preserves the f64 dtype).
+
+    def state(self) -> dict:
+        return {
+            "centers": np.array(self._c, np.float32),
+            "weights": np.array(self._w, np.float64),
+            "spilled": np.asarray(self.spilled, np.int64),
+            "max_spill_dist": np.asarray(self.max_spill_dist, np.float64),
+        }
+
+    def state_template(self) -> dict:
+        """Zero-row tree with the same structure/dtypes as :meth:`state`
+        (restore takes shapes from the checkpoint meta, not the template)."""
+        return {
+            "centers": np.zeros((0, self.d), np.float32),
+            "weights": np.zeros((0,), np.float64),
+            "spilled": np.asarray(0, np.int64),
+            "max_spill_dist": np.asarray(0.0, np.float64),
+        }
+
+    def load_state(self, tree: dict) -> None:
+        self._c = np.asarray(tree["centers"], np.float32)
+        self._w = np.asarray(tree["weights"], np.float64)
+        assert self._c.shape[1] == self.d and \
+            self._c.shape[0] == self._w.shape[0]
+        self.spilled = int(tree["spilled"])
+        self.max_spill_dist = float(tree["max_spill_dist"])
+
     def _absorb_into(self, target_c, target_w, cand_c, cand_w, spill: bool):
         """Assign candidates to nearest target center; within-eps (or ALL,
         when ``spill``) hand over their mass.  Returns the survivor mask."""

@@ -162,16 +162,30 @@ class ChunkedDataset:
             pos += e - s
         return out
 
-    def chunks(self):
-        """Yield ``(x (chunk, d) f32, n_valid)`` fixed-shape host chunks."""
-        for s in range(0, self.n, self.chunk):
-            e = min(s + self.chunk, self.n)
-            if e - s == self.chunk:
-                yield self.rows(s, e), self.chunk
-            else:  # ragged tail: zero-pad + mask, same compiled shape
-                x = np.zeros((self.chunk, self.d), np.float32)
-                x[: e - s] = self.rows(s, e)
-                yield x, e - s
+    def _chunk_at(self, ci: int):
+        """Chunk ``ci`` as ``(x (chunk, d) f32, n_valid)``; pure in
+        ``(name, seed, ci)``, so a failed/retried read regenerates the
+        SAME bytes.  ``data.chunk`` is the chaos injection site for flaky
+        chunk reads — transient faults are retried in place (the chunk is
+        a pure function, the canonical safe-retry situation), permanent
+        ones propagate."""
+        from repro.runtime import chaos
+        chaos.inject("data.chunk")
+        s = ci * self.chunk
+        e = min(s + self.chunk, self.n)
+        if e - s == self.chunk:
+            return self.rows(s, e), self.chunk
+        x = np.zeros((self.chunk, self.d), np.float32)  # ragged tail
+        x[: e - s] = self.rows(s, e)
+        return x, e - s
+
+    def chunks(self, start: int = 0):
+        """Yield ``(x (chunk, d) f32, n_valid)`` fixed-shape host chunks
+        from chunk index ``start`` (the resume cursor of a checkpointed
+        ingest: chunk ci covers rows [ci*chunk, (ci+1)*chunk))."""
+        from repro.runtime.fault import retry_call
+        for ci in range(start, self.num_chunks):
+            yield retry_call(self._chunk_at, ci, key=f"chunk{ci}")
 
     def materialize(self, limit: int = 1 << 22) -> np.ndarray:
         """The whole dataset as one array — small-n tests/oracles only."""

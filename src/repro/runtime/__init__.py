@@ -1,3 +1,8 @@
 from repro.runtime.fault import (  # noqa: F401
-    PreemptionGuard, StepWatchdog, ElasticPlan,
+    PreemptionGuard, StepWatchdog, ElasticPlan, Preempted, RetryPolicy,
+    retry_call,
+)
+from repro.runtime import chaos  # noqa: F401
+from repro.runtime.chaos import (  # noqa: F401
+    FaultPlan, FaultSpec, InjectedFault, TransientFault,
 )

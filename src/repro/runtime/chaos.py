@@ -1,0 +1,240 @@
+"""Deterministic, seed-keyed fault injection (DESIGN.md §17).
+
+Every failure mode the fault-tolerance layer claims to survive must be
+REPRODUCIBLE in CI, not just argued about.  This module provides the
+injection harness: named injection sites threaded through the host-side
+drivers (ingest feed, chunk generation, streaming merge, snapshot publish,
+checkpoint I/O, serving dispatch) fire faults according to an installed
+:class:`FaultPlan` — and fire the SAME faults on every run with the same
+plan, because triggering is a pure function of ``(seed, site, call#)``.
+
+Contract:
+
+  * **zero-cost when disabled** — with no plan installed, :func:`inject`
+    is one module-global load plus a ``None`` check (the same budget as a
+    disabled obs metric; gated by ``bench-obs`` staying green on the
+    instrumented paths).  :func:`corrupt` additionally returns its value
+    untouched.
+  * **host-side only** — injection sites live exclusively in host driver
+    code, never inside jitted programs, so installing/uninstalling a plan
+    can never retrace anything (compile-count asserted in
+    tests/test_chaos.py).
+  * **deterministic** — probabilistic faults hash ``(seed, site, call#)``
+    through crc32, NOT Python's process-randomized ``hash``, so a plan
+    reproduces bit-identically across processes (the subprocess crash
+    tests rely on this).
+
+Fault kinds:
+
+  * ``"transient"`` — raises :class:`TransientFault`; the retry machinery
+    in ``runtime.fault.retry_call`` recovers these (a flaky disk read, a
+    preempted RPC).
+  * ``"error"``     — raises :class:`InjectedFault`; permanent, retries
+    must NOT absorb it (a poisoned input, an assertion).
+  * ``"delay"``     — sleeps ``delay_s`` (a straggler feed, a slow disk);
+    the watchdog/straggler machinery is what should notice.
+  * ``"corrupt"``   — :func:`corrupt` returns a bit-flipped COPY of the
+    payload (torn write, bad DMA); checksums downstream must catch it.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+import zlib
+
+import numpy as np
+
+from repro.obs import metrics as _om
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "InjectedFault", "TransientFault",
+    "install", "uninstall", "active", "plan", "inject", "corrupt",
+]
+
+_M_INJECTED = _om.counter("chaos.injected")
+_M_DELAY_MS = _om.histogram("chaos.delay_ms")
+
+
+class InjectedFault(RuntimeError):
+    """A fault fired by the harness.  Permanent: retries must re-raise."""
+
+    def __init__(self, site: str, call: int, kind: str = "error"):
+        super().__init__(f"injected {kind} fault at {site!r} (call {call})")
+        self.site = site
+        self.call = call
+        self.kind = kind
+
+
+class TransientFault(InjectedFault):
+    """A retryable injected fault (``runtime.fault.retry_call`` absorbs
+    these up to its policy's attempt/deadline limits)."""
+
+    def __init__(self, site: str, call: int):
+        super().__init__(site, call, kind="transient")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """When and how one site misbehaves.
+
+    Triggering is the union of three schedules, all on the site's 1-based
+    call counter: ``every`` fires on every nth call, ``at`` on the exact
+    listed calls, ``p`` on a deterministic pseudo-coin keyed by
+    ``(plan.seed, site, call#)``.  ``kind`` picks the failure mode (module
+    docstring); ``delay_s`` is the sleep for ``"delay"`` faults.
+    """
+
+    kind: str = "transient"
+    every: int | None = None
+    at: tuple = ()
+    p: float = 0.0
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in ("transient", "error", "delay", "corrupt"), \
+            f"unknown fault kind {self.kind!r}"
+        assert self.every is None or self.every >= 1
+
+    def fires(self, seed: int, site: str, call: int) -> bool:
+        if self.every is not None and call % self.every == 0:
+            return True
+        if call in self.at:
+            return True
+        if self.p > 0.0:
+            # crc32 of the (seed, site, call) triple -> uniform in [0, 1):
+            # stable across processes and platforms (unlike hash()).
+            h = zlib.crc32(f"{seed}:{site}:{call}".encode())
+            return (h / 2**32) < self.p
+        return False
+
+
+class FaultPlan:
+    """A named-site -> fault-spec map with deterministic triggering.
+
+    ``sites`` maps an injection-site name to one :class:`FaultSpec` or a
+    list of them (first firing spec wins).  Per-site call and injection
+    counts are kept under a lock (sites are hit from producer/dispatcher
+    threads) and exposed via :meth:`stats` so tests and the chaos bench
+    can assert exactly how many faults a run absorbed.
+    """
+
+    def __init__(self, sites: dict, seed: int = 0):
+        self.seed = int(seed)
+        self.sites: dict[str, tuple[FaultSpec, ...]] = {}
+        for name, specs in sites.items():
+            if isinstance(specs, FaultSpec):
+                specs = (specs,)
+            self.sites[name] = tuple(specs)
+        self.calls: dict[str, int] = {}
+        self.injected: dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def _fire(self, site: str):
+        """Count the call; return ``(firing spec or None, call#)``."""
+        specs = self.sites.get(site)
+        with self._lock:
+            call = self.calls.get(site, 0) + 1
+            self.calls[site] = call
+            if specs is None:
+                return None, call
+            for spec in specs:
+                if spec.fires(self.seed, site, call):
+                    self.injected[site] = self.injected.get(site, 0) + 1
+                    return spec, call
+        return None, call
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"calls": dict(self.calls),
+                    "injected": dict(self.injected),
+                    "total_injected": sum(self.injected.values())}
+
+
+#: The installed plan.  ``None`` (the default) short-circuits every
+#: injection site to one global load + compare — the zero-cost contract.
+_PLAN: FaultPlan | None = None
+
+
+def install(p: FaultPlan) -> None:
+    global _PLAN
+    _PLAN = p
+
+
+def uninstall() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def plan() -> FaultPlan | None:
+    return _PLAN
+
+
+@contextlib.contextmanager
+def active(p: FaultPlan):
+    """Scope a plan: installs on entry, ALWAYS uninstalls on exit (so one
+    failing chaos test cannot leak faults into the rest of the suite)."""
+    install(p)
+    try:
+        yield p
+    finally:
+        uninstall()
+
+
+def inject(site: str) -> None:
+    """The injection point: raise/sleep per the installed plan.
+
+    No plan -> returns immediately (one global load + None check).  Sites
+    are plain string constants in host driver code; the jitted programs
+    they bracket are never aware of the harness.
+    """
+    p = _PLAN
+    if p is None:
+        return
+    spec, call = p._fire(site)
+    if spec is None:
+        return
+    _M_INJECTED.inc()
+    _om.counter("chaos.faults", {"site": site, "kind": spec.kind}).inc()
+    if spec.kind == "delay":
+        _M_DELAY_MS.observe(spec.delay_s * 1e3)
+        time.sleep(spec.delay_s)
+        return
+    if spec.kind == "corrupt":
+        return  # corruption applies to payloads: see corrupt()
+    if spec.kind == "transient":
+        raise TransientFault(site, call)
+    raise InjectedFault(site, call)
+
+
+def corrupt(site: str, value: np.ndarray) -> np.ndarray:
+    """Payload-corrupting injection point: returns ``value`` untouched
+    unless a ``"corrupt"`` spec fires, in which case a COPY with one bit
+    flipped per 4KiB page comes back (a torn write / bad DMA model —
+    checksums downstream are expected to catch it, see checkpoint/store).
+    Non-corrupt specs at the same site behave exactly like :func:`inject`.
+    """
+    p = _PLAN
+    if p is None:
+        return value
+    spec, call = p._fire(site)
+    if spec is None:
+        return value
+    _M_INJECTED.inc()
+    _om.counter("chaos.faults", {"site": site, "kind": spec.kind}).inc()
+    if spec.kind == "delay":
+        _M_DELAY_MS.observe(spec.delay_s * 1e3)
+        time.sleep(spec.delay_s)
+        return value
+    if spec.kind == "transient":
+        raise TransientFault(site, call)
+    if spec.kind == "error":
+        raise InjectedFault(site, call)
+    out = np.array(value, copy=True)
+    raw = out.view(np.uint8).reshape(-1)
+    # one deterministic bit flip per 4KiB page, position keyed like fires()
+    for page in range(0, raw.size, 4096):
+        h = zlib.crc32(f"{p.seed}:{site}:{call}:{page}".encode())
+        raw[page + h % min(4096, raw.size - page)] ^= 1 << (h >> 29)
+    return out

@@ -1,10 +1,14 @@
-"""Fault-tolerance runtime: preemption, stragglers, elastic re-mesh.
+"""Fault-tolerance runtime: preemption, retries, stragglers, elastic re-mesh.
 
 At 1000+ node scale the failure model is: (a) SIGTERM preemptions with a
-grace window, (b) slow/hung hosts (stragglers), (c) permanent node loss that
+grace window, (b) transient I/O and dispatch faults that a bounded retry
+absorbs, (c) slow/hung hosts (stragglers), (d) permanent node loss that
 requires restarting on a different device count.  The pieces here are
 host-side and framework-agnostic; the distributed decisions they trigger
-(checkpoint now, skip ahead, re-lower) live in launch/train.py.
+(checkpoint now, skip ahead, re-lower) live in the ingest/serving drivers
+and launch/train.py.  DESIGN.md §17 maps each primitive onto the
+ingest/serving failure model; runtime/chaos.py makes every mode
+reproducible in CI.
 """
 from __future__ import annotations
 
@@ -12,23 +16,47 @@ import dataclasses
 import signal
 import threading
 import time
+import zlib
 from collections import deque
 from typing import Callable
+
+from repro.obs import metrics as _om
+from repro.runtime.chaos import TransientFault
+
+_M_RETRIES = _om.counter("fault.retries")
+_M_RECOVERED = _om.counter("fault.recovered")
+_M_GIVEUPS = _om.counter("fault.giveups")
+
+
+class Preempted(RuntimeError):
+    """Raised by a drain-aware loop that stopped cleanly on SIGTERM after
+    persisting its state; ``step`` is the checkpoint the resume starts
+    from (None when the loop had nothing durable to save)."""
+
+    def __init__(self, message: str, step: int | None = None):
+        super().__init__(message)
+        self.step = step
 
 
 class PreemptionGuard:
     """SIGTERM/SIGINT -> cooperative shutdown flag.
 
-    The train loop polls ``should_stop`` each step and performs a final
-    synchronous checkpoint inside the grace window instead of dying mid-step.
+    The ingest/serving/train loops poll ``should_stop`` each step and
+    perform a final synchronous checkpoint/drain inside the grace window
+    instead of dying mid-step.  Guards NEST: ``uninstall()`` (or leaving
+    the ``with`` block) restores the exact handlers it displaced, so a
+    guard embedded in a library call cannot clobber the caller's — the
+    restore is LIFO like the installs (tested in tests/test_runtime.py).
     """
 
     def __init__(self, signals=(signal.SIGTERM,)):
         self._stop = threading.Event()
         self._prev = {}
+        self._installed = False
         for sig in signals:
             try:
                 self._prev[sig] = signal.signal(sig, self._handler)
+                self._installed = True
             except ValueError:  # not the main thread (tests)
                 pass
 
@@ -41,6 +69,87 @@ class PreemptionGuard:
     @property
     def should_stop(self) -> bool:
         return self._stop.is_set()
+
+    def uninstall(self) -> None:
+        """Restore the handlers this guard displaced (idempotent).  A
+        pending stop flag survives — uninstalling stops LISTENING, it does
+        not un-ring the bell."""
+        if not self._installed:
+            return
+        for sig, prev in self._prev.items():
+            try:
+                signal.signal(sig, prev)
+            except ValueError:  # not the main thread anymore
+                pass
+        self._installed = False
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.uninstall()
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded jittered-exponential-backoff schedule.
+
+    Attempt k (0-based retry count) sleeps
+    ``min(base_s * factor**k, max_s) * (1 + jitter * u)`` with ``u`` a
+    DETERMINISTIC pseudo-uniform in [0, 1) keyed by ``(seed, key, k)`` —
+    retries de-synchronize across callers (no thundering herd) yet replay
+    bit-identically under a chaos plan.  ``max_attempts`` counts total
+    tries, so ``max_attempts=1`` means no retry at all.
+    """
+
+    max_attempts: int = 4
+    base_s: float = 0.01
+    factor: float = 2.0
+    max_s: float = 1.0
+    jitter: float = 0.5
+    seed: int = 0
+
+    def backoff_s(self, k: int, key: str = "") -> float:
+        base = min(self.base_s * self.factor**k, self.max_s)
+        h = zlib.crc32(f"{self.seed}:{key}:{k}".encode()) / 2**32
+        return base * (1.0 + self.jitter * h)
+
+
+def retry_call(fn: Callable, *args, policy: RetryPolicy | None = None,
+               retry_on: tuple = (TransientFault,), deadline: float | None = None,
+               key: str = "", on_retry: Callable | None = None, **kw):
+    """Call ``fn`` with bounded retries on transient faults.
+
+    Retries only exceptions in ``retry_on`` (everything else propagates on
+    the first throw); honors an absolute ``deadline`` (``time.monotonic``
+    seconds) — a retry whose backoff would land past the deadline is not
+    attempted, the last transient error re-raises instead.  ``fn`` must be
+    safe to re-run (the call sites wrap pure chunk generation / staging /
+    idempotent transforms, never partially-applied mutations).
+    ``on_retry(attempt, exc)`` observes each recovery (tests count them).
+    """
+    policy = RetryPolicy() if policy is None else policy
+    attempt = 0
+    while True:
+        try:
+            out = fn(*args, **kw)
+            if attempt:
+                _M_RECOVERED.inc()
+            return out
+        except retry_on as e:
+            attempt += 1
+            if attempt >= policy.max_attempts:
+                _M_GIVEUPS.inc()
+                raise
+            pause = policy.backoff_s(attempt - 1, key)
+            if deadline is not None \
+                    and time.monotonic() + pause > deadline:
+                _M_GIVEUPS.inc()
+                raise
+            _M_RETRIES.inc()
+            if on_retry is not None:
+                on_retry(attempt, e)
+            time.sleep(pause)
 
 
 class StepWatchdog:

@@ -2,5 +2,5 @@
 # over the hot-swap transform — deadline-aware request coalescing into the
 # power-of-two padding buckets the compiled projection already serves.
 from repro.serving.batching import (  # noqa: F401
-    BatchingFrontEnd, ServeStats,
+    BatchingFrontEnd, RequestShed, ServeStats, ServedRows,
 )

@@ -41,6 +41,8 @@ import numpy as np
 from repro.core.shadow import _pow2_ceil
 from repro.obs import metrics as _om
 from repro.obs.trace import span as _span
+from repro.runtime import chaos
+from repro.runtime.fault import RetryPolicy, retry_call
 
 # serving metrics (DESIGN.md §16): created once at import, no-ops until
 # obs.enable().  Per-bucket series use the pow2 bucket as the only label —
@@ -52,6 +54,36 @@ _M_ERRORS = _om.counter("serve.errors")
 _M_QDEPTH = _om.gauge("serve.queue_depth")
 _M_COALESCE = _om.histogram("serve.coalesce_rows", bounds=_om.SIZE_BUCKETS)
 _M_SLACK = _om.histogram("serve.deadline_slack_ms")
+# failure-path metrics (DESIGN.md §17): load shed at admission, dispatch
+# retries that recovered, and batches served against a degraded snapshot.
+_M_SHED = _om.counter("serve.shed")
+_M_DEGRADED_BATCH = _om.counter("serve.degraded_batches")
+
+
+class RequestShed(RuntimeError):
+    """Admission control rejected the request: the queue was at
+    ``max_queue`` when it arrived.  Delivered THROUGH the request's future
+    (never raised at ``submit``), so shed and served requests flow through
+    one code path on the caller side; a shed request was never queued and
+    consumed no device time."""
+
+
+class ServedRows(np.ndarray):
+    """(k, r) result rows, optionally carrying serving metadata.
+
+    ``info`` is a ``streaming.swap.SnapshotInfo`` when the batch was served
+    DEGRADED (a failed publish left queries on the last good snapshot —
+    ``info.staleness_bound`` is that snapshot's §5 error budget), else
+    ``None``.  A plain ndarray subclass so every existing caller keeps
+    working unchanged; only fault-aware callers look at ``.info``."""
+
+    info = None  # class-level default: views/copies read as not-degraded
+
+    @classmethod
+    def _wrap(cls, z: np.ndarray, info) -> "ServedRows":
+        out = z.view(cls)
+        out.info = info
+        return out
 
 #: EWMA smoothing for the per-bucket service-time estimate.
 _EWMA_ALPHA = 0.3
@@ -71,6 +103,9 @@ class ServeStats:
     batched_rows: int = 0      # rows that shared a batch with another request
     full_dispatches: int = 0   # batches shipped because max_batch was hit
     max_batch_rows: int = 0
+    shed: int = 0              # requests rejected at admission (max_queue)
+    retries: int = 0           # transient dispatch faults absorbed in place
+    degraded_batches: int = 0  # batches served against a stale snapshot
     ewma_service_s: dict = dataclasses.field(default_factory=dict)
 
 
@@ -98,12 +133,25 @@ class BatchingFrontEnd:
     """
 
     def __init__(self, server, *, max_batch: int = 1024, slo_ms: float = 50.0,
-                 min_wait_ms: float = 0.0, autostart: bool = True):
+                 min_wait_ms: float = 0.0, autostart: bool = True,
+                 max_queue: int | None = None,
+                 retry: RetryPolicy | None = None, guard=None):
         assert max_batch >= 1
         self.server = server
         self.max_batch = int(max_batch)
         self.slo_s = float(slo_ms) * 1e-3
         self.min_wait_s = float(min_wait_ms) * 1e-3
+        #: admission bound (DESIGN.md §17): beyond ``max_queue`` pending
+        #: requests, new arrivals SHED (RequestShed through their future)
+        #: instead of queueing into certain SLO violation — bounded queue,
+        #: bounded tail latency, and zero non-shed drops by construction.
+        self.max_queue = None if max_queue is None else int(max_queue)
+        #: transient-dispatch retry schedule; deadline-bounded per batch
+        #: (never retries past the newest deadline in the batch).
+        self.retry = RetryPolicy() if retry is None else retry
+        #: optional runtime.PreemptionGuard: on SIGTERM the dispatcher
+        #: closes admission and drains everything already queued.
+        self._guard = guard
         self.stats = ServeStats()
         # per-bucket (histogram, gauge) handles, resolved once per bucket:
         # a registry lookup per dispatch (label-dict alloc + registry lock)
@@ -130,6 +178,13 @@ class BatchingFrontEnd:
         with self._cond:
             if self._closed:
                 raise RuntimeError("submit() on a closed BatchingFrontEnd")
+            if self.max_queue is not None \
+                    and len(self._pending) >= self.max_queue:
+                self.stats.shed += 1
+                _M_SHED.inc()
+                fut.set_exception(RequestShed(
+                    f"queue at max_queue={self.max_queue}; request shed"))
+                return fut
             self._pending.append(req)
             self.stats.requests += 1
             self.stats.rows += x.shape[0]
@@ -225,15 +280,37 @@ class BatchingFrontEnd:
             xs = np.concatenate(
                 [xs, np.zeros((bucket - rows, xs.shape[1]), xs.dtype)])
         t0 = time.monotonic()
-        try:
+
+        def dispatch():
+            # the chaos site fires INSIDE the retried closure, before the
+            # (idempotent: pure function of xs + snapshot) transform — a
+            # transient here is absorbed by the backoff schedule, bounded
+            # by the newest deadline in the batch so retries never burn
+            # time no request can use
+            chaos.inject("serve.dispatch")
             with _span("serve.batch", rows=rows, bucket=bucket,
                        requests=len(batch)):
-                z = np.asarray(self.server.transform(xs))[:rows]
+                return np.asarray(self.server.transform(xs))[:rows]
+
+        retries = [0]
+
+        def _on_retry(attempt, exc):
+            retries[0] = attempt
+
+        try:
+            z = retry_call(
+                dispatch, policy=self.retry,
+                deadline=max(p.deadline for p in batch),
+                key=f"batch{self.stats.batches}", on_retry=_on_retry)
         except BaseException as e:  # noqa: BLE001 — every caller must learn
             _M_ERRORS.inc()
             for p in batch:
                 p.future.set_exception(e)
             return
+        finally:
+            if retries[0]:
+                with self._cond:
+                    self.stats.retries += retries[0]
         dt = time.monotonic() - t0
         with self._cond:
             prev = self.stats.ewma_service_s.get(bucket)
@@ -254,17 +331,36 @@ class BatchingFrontEnd:
                     _om.gauge("serve.ewma_service_ms", {"bucket": bucket})))
             handles[0].observe(dt * 1e3)
             handles[1].set(ewma * 1e3)
+        info = None
+        if getattr(self.server, "degraded", False):
+            # stale-snapshot serving (failed publish): tag every response
+            # in this batch with the SnapshotInfo carrying the §5
+            # staleness error budget, so callers can price the answer
+            info = self.server.degraded_info()
+            with self._cond:
+                self.stats.degraded_batches += 1
+            _M_DEGRADED_BATCH.inc()
         off = 0
         for p in batch:
             k = p.x.shape[0]
-            p.future.set_result(z[off : off + k])
+            out = z[off : off + k]
+            if info is not None:
+                out = ServedRows._wrap(out, info)
+            p.future.set_result(out)
             off += k
 
     def _loop(self) -> None:
         while True:
             with self._cond:
                 while not self._pending and not self._closed:
-                    self._cond.wait()
+                    if self._guard is not None and self._guard.should_stop:
+                        self._closed = True  # preemption: close admission
+                        break
+                    self._cond.wait(timeout=0.05 if self._guard else None)
+                if self._guard is not None and self._guard.should_stop:
+                    # drain mode: everything already admitted still serves
+                    # (zero non-shed drops), nothing new gets in
+                    self._closed = True
                 if self._closed and not self._pending:
                     return
                 wait = self._wait_s_locked(time.monotonic())

@@ -12,4 +12,4 @@ from repro.streaming.ingest import (  # noqa: F401
     ingest, compact, needs_compaction,
 )
 from repro.streaming.drift import DriftDetector, stream_mmd, refresh  # noqa: F401
-from repro.streaming.swap import HotSwapServer  # noqa: F401
+from repro.streaming.swap import HotSwapServer, SnapshotInfo  # noqa: F401

@@ -13,6 +13,7 @@ change (compaction/growth, logarithmically rare) re-traces, once per bucket.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ from repro.kernels import ops as kernel_ops
 from repro.kernels import quantize
 from repro.obs import metrics as _om
 from repro.obs.trace import span as _span
+from repro.runtime import chaos
 from repro.streaming.state import StreamingRSKPCA
 
 # publish/serve telemetry (DESIGN.md §16): how often the operator turns
@@ -31,6 +33,31 @@ _M_PUBLISHES = _om.counter("swap.publishes")
 _M_PUB_MS = _om.histogram("swap.publish_ms")
 _M_AGE = _om.gauge("swap.snapshot_age_s")
 _M_TRANSFORMS = _om.counter("swap.transforms")
+# degradation telemetry (DESIGN.md §17): failed publishes and the §5
+# operator-drift budget the stale snapshot is serving under.
+_M_PUB_FAIL = _om.counter("swap.publish_failures")
+_M_DEGRADED = _om.gauge("swap.degraded")
+_M_STALENESS = _om.gauge("swap.staleness_bound")
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotInfo:
+    """What a reader can learn about the operator it is being served by.
+
+    ``degraded`` flips when a publish FAILED and queries are riding the
+    last good snapshot; ``staleness_bound`` is then the Theorem-5.x error
+    budget ``kappa * sqrt(2 (1 - t^2))`` (``core.mmd.staleness_bound``) of
+    that stale operator against the newest state the server has SEEN —
+    finite and usually tiny, because mass updates move the normalized
+    operator slowly (that is the paper's whole §5 point, repurposed as a
+    serving SLO).  ``inf`` only when no live weights have been seen at all.
+    """
+
+    version: int
+    published_at: float | None
+    degraded: bool
+    failed_publishes: int
+    staleness_bound: float
 
 
 class HotSwapServer:
@@ -51,6 +78,15 @@ class HotSwapServer:
         #: monotonic timestamp of the last publish; transform reports the
         #: served snapshot's age off it (``swap.snapshot_age_s``)
         self.published_at: float | None = None
+        #: degradation bookkeeping (DESIGN.md §17): the mass vector the
+        #: live snapshot was published with, the newest mass vector the
+        #: server has SEEN (a failed try_publish still updates it — that
+        #: is what makes the staleness bound honest), and the consecutive
+        #: failed-publish count since the last good publish.
+        self._pub_weights: np.ndarray | None = None
+        self._cur_weights: np.ndarray | None = None
+        self.failed_publishes = 0
+        self.degraded = False
         if state is not None:
             self.publish(state)
 
@@ -63,9 +99,16 @@ class HotSwapServer:
         also quantizes the projector — one O(cap x rank) jitted pass — and
         caches the (Aq, scales) pair in the swap tuple, so serves never pay
         per-batch quantization and in-flight batches keep the pair they
-        already read."""
+        already read.
+
+        Fault model: ``swap.publish`` is the chaos injection site, fired
+        BEFORE the snapshot store — a failed publish can never tear the
+        served operator, it leaves the previous snapshot fully intact (the
+        last-good-fallback invariant ``try_publish`` builds on)."""
         t0 = time.monotonic()
         with _span("swap.publish", version=self.version + 1):
+            weights = np.asarray(state.weights, np.float64)
+            self._cur_weights = weights  # seen, even if the store fails
             centers = jnp.asarray(state.centers)
             projector = jnp.asarray(state.projector)
             kernel = state.kernel
@@ -73,13 +116,65 @@ class HotSwapServer:
                                                        kernel.precision)
                            if kernel.precision in quantize.QUANT_PRECISIONS
                            else None)
+            chaos.inject("swap.publish")
             self._snapshot = (centers, projector, kernel, projector_q)
+        self._pub_weights = weights
         self.published_at = time.monotonic()
         self.version += 1
+        self.failed_publishes = 0
+        self.degraded = False
         _M_PUBLISHES.inc()
         _M_PUB_MS.observe((self.published_at - t0) * 1e3)
         _M_AGE.set(0.0)  # a fresh snapshot: age restarts from zero
+        if _om.enabled():
+            _M_DEGRADED.set(0.0)
+            _M_STALENESS.set(0.0)
         return self.version
+
+    def try_publish(self, state: StreamingRSKPCA) -> bool:
+        """Graceful-degradation publish: on ANY failure keep serving the
+        last good snapshot and report the §5 staleness budget instead of
+        taking the server down.
+
+        Returns True on a clean publish.  On failure the served operator is
+        untouched (``publish`` cannot tear it), ``degraded`` flips, and
+        ``degraded_info()`` prices the stale snapshot via
+        ``core.mmd.staleness_bound`` against the newest mass vector seen —
+        the publisher retries on its own cadence (the next ingest tick),
+        so no retry loop lives here."""
+        try:
+            self.publish(state)
+            return True
+        except Exception:
+            self.failed_publishes += 1
+            self.degraded = self._snapshot is not None
+            _M_PUB_FAIL.inc()
+            if _om.enabled():
+                info = self.degraded_info()
+                _M_DEGRADED.set(1.0 if info.degraded else 0.0)
+                if np.isfinite(info.staleness_bound):
+                    _M_STALENESS.set(info.staleness_bound)
+            if self._snapshot is None:
+                raise  # nothing to fall back to: degrade is impossible
+            return False
+
+    def degraded_info(self) -> SnapshotInfo:
+        """Current serving health + the stale-operator error budget."""
+        bound = 0.0
+        if self.degraded:
+            if self._pub_weights is None or self._cur_weights is None:
+                bound = float("inf")
+            else:
+                from repro.core.mmd import staleness_bound
+                kappa = (self._snapshot[2].kappa
+                         if self._snapshot is not None else 1.0)
+                bound = staleness_bound(self._pub_weights,
+                                        self._cur_weights, kappa=kappa)
+        return SnapshotInfo(version=self.version,
+                            published_at=self.published_at,
+                            degraded=self.degraded,
+                            failed_publishes=self.failed_publishes,
+                            staleness_bound=bound)
 
     @property
     def published(self) -> bool:

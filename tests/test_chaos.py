@@ -1,0 +1,356 @@
+"""Fault injection, crash-consistent ingest, and graceful degradation.
+
+The DESIGN.md §17 contract, tested end to end: deterministic fault plans
+(same seed -> same fires, cross-process), retries that absorb transients
+without changing results, SIGKILL-crash ingest that resumes BIT-EXACT from
+its atomic checkpoints, preemption that drains cleanly, and a serving tier
+that degrades to the last good snapshot instead of going down.
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.ingest_pipeline import select_streaming
+from repro.data.kpca_datasets import ChunkedDataset
+from repro.runtime import chaos
+from repro.runtime.chaos import (FaultPlan, FaultSpec, InjectedFault,
+                                 TransientFault)
+from repro.runtime.fault import Preempted, PreemptionGuard, RetryPolicy, \
+    retry_call
+
+_EPS = 0.25
+
+
+def _src(n=1536, chunk=256, seed=3):
+    return ChunkedDataset("pendigits", n=n, chunk=chunk, seed=seed)
+
+
+# ---------------------------------------------------------------- plans --
+
+def test_fault_plan_every_and_at_schedules():
+    plan = FaultPlan({"s": FaultSpec(kind="error", every=3, at=(5,))})
+    with chaos.active(plan):
+        fired = []
+        for k in range(1, 10):
+            try:
+                chaos.inject("s")
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+    assert fired == [False, False, True, False, True, True,
+                     False, False, True]
+    assert plan.stats()["calls"]["s"] == 9
+
+
+def test_fault_plan_coin_is_deterministic_across_plans():
+    """p-faults are a pure function of (seed, site, call#): two plans with
+    the same seed fire on EXACTLY the same calls; a different seed gives a
+    different (but equally reproducible) pattern."""
+    def pattern(seed):
+        plan = FaultPlan({"s": FaultSpec(kind="error", p=0.3)}, seed=seed)
+        out = []
+        with chaos.active(plan):
+            for _ in range(200):
+                try:
+                    chaos.inject("s")
+                    out.append(0)
+                except InjectedFault:
+                    out.append(1)
+        return out
+
+    a, b, c = pattern(1), pattern(1), pattern(2)
+    assert a == b
+    assert a != c
+    assert 20 <= sum(a) <= 100  # the coin is actually ~0.3, not 0 or 1
+
+
+def test_no_plan_is_a_noop_and_uninstall_restores_it():
+    assert chaos.plan() is None
+    chaos.inject("anything")  # must not raise
+    with chaos.active(FaultPlan({})):
+        assert chaos.plan() is not None
+    assert chaos.plan() is None
+
+
+def test_retry_absorbs_transients_but_not_permanent_faults():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        chaos.inject("s")
+        return 42
+
+    with chaos.active(FaultPlan({"s": FaultSpec(kind="transient",
+                                                at=(1, 2))})):
+        assert retry_call(flaky, policy=RetryPolicy(base_s=1e-4)) == 42
+    assert len(calls) == 3
+
+    with chaos.active(FaultPlan({"s": FaultSpec(kind="error", every=1)})):
+        with pytest.raises(InjectedFault):
+            retry_call(flaky, policy=RetryPolicy(base_s=1e-4))
+
+
+def test_retry_honors_deadline():
+    def always():
+        raise TransientFault("s", 1)
+
+    t0 = time.monotonic()
+    with pytest.raises(TransientFault):
+        retry_call(always, policy=RetryPolicy(base_s=0.5, max_attempts=10),
+                   deadline=time.monotonic() + 0.05)
+    assert time.monotonic() - t0 < 0.4  # gave up instead of sleeping 0.5s
+
+
+def test_corrupt_flips_bits_only_when_firing():
+    x = np.zeros(8192, np.uint8)
+    assert chaos.corrupt("s", x) is x  # no plan: passthrough, no copy
+    with chaos.active(FaultPlan({"s": FaultSpec(kind="corrupt", every=1)})):
+        y = chaos.corrupt("s", x)
+    assert y is not x and (y != x).sum() >= 2  # >= 1 flip per 4KiB page
+    assert (x == 0).all()  # the original is never touched
+
+
+# ------------------------------------------------- zero-cost / no-retrace --
+
+def test_plan_toggle_never_retraces_the_serving_program():
+    """Injection sites are host-side only: installing/uninstalling a plan
+    around a jitted transform adds ZERO compiled programs."""
+    from repro import streaming
+    from repro.core import gaussian
+    from repro.core.rsde import RSDE
+    from repro.kernels import ops as kernel_ops
+
+    rng = np.random.default_rng(0)
+    c = rng.normal(size=(32, 4)).astype(np.float32)
+    rsde = RSDE(c, np.ones(32, np.float64), n=32.0, scheme="test")
+    st = streaming.from_rsde(rsde, gaussian(1.0), 3, eps=0.5, cap=32)
+    srv = streaming.HotSwapServer(st)
+    x = rng.normal(size=(8, 4)).astype(np.float32)
+    np.asarray(srv.transform(x))  # warm
+    before = kernel_ops.projection_compile_count()
+
+    plan = FaultPlan({"swap.publish": FaultSpec(every=10**9),
+                      "serve.dispatch": FaultSpec(every=10**9)})
+    with chaos.active(plan):
+        np.asarray(srv.transform(x))
+    np.asarray(srv.transform(x))
+    assert kernel_ops.projection_compile_count() == before
+
+
+# ------------------------------------------------------ faulted ingest ----
+
+def test_ingest_with_transient_faults_is_bit_exact():
+    ref, _ = select_streaming(_src(), _EPS, block=128)
+    fault = FaultSpec(kind="transient", at=(2,), p=0.05)
+    plan = FaultPlan({"data.chunk": fault, "ingest.feed": fault,
+                      "ingest.merge": fault}, seed=11)
+    with chaos.active(plan) as p:
+        got, _ = select_streaming(_src(), _EPS, block=128)
+        assert p.stats()["total_injected"] >= 3
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(got.centers))
+    np.testing.assert_array_equal(np.asarray(ref.weights),
+                                  np.asarray(got.weights))
+
+
+def test_ingest_checkpoint_resume_is_bit_exact(tmp_path):
+    """Interrupt-by-truncation: ingest the first 3 chunks with
+    checkpointing, then resume over the full stream — identical to an
+    uninterrupted run (the ChunkedDataset-is-a-seed property)."""
+    d = str(tmp_path)
+    ref, _ = select_streaming(_src(), _EPS, block=128)
+    select_streaming(_src(n=768), _EPS, block=128,
+                     checkpoint_dir=d, checkpoint_every=1)
+    got, stats = select_streaming(_src(), _EPS, block=128,
+                                  checkpoint_dir=d, resume=True)
+    assert stats.rows == 1536  # resumed counters cover the WHOLE stream
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(got.centers))
+    np.testing.assert_array_equal(np.asarray(ref.weights),
+                                  np.asarray(got.weights))
+    assert got.weights.dtype == np.float64
+    assert float(got.weights.sum()) == 1536.0  # weight-exact through resume
+
+
+def test_resume_falls_back_over_a_corrupt_checkpoint(tmp_path):
+    """Rot the NEWEST checkpoint's shard: resume must walk back to the
+    previous intact step (crc catches the rot) and still finish bit-exact."""
+    from repro.checkpoint.store import available_steps
+    d = str(tmp_path)
+    ref, _ = select_streaming(_src(), _EPS, block=128)
+    select_streaming(_src(n=1024), _EPS, block=128,
+                     checkpoint_dir=d, checkpoint_every=1)
+    newest = available_steps(d)[-1]
+    shard = os.path.join(d, f"step_{newest:08d}", "shard_0.npz")
+    raw = bytearray(open(shard, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(shard, "wb").write(bytes(raw))
+
+    got, _ = select_streaming(_src(), _EPS, block=128,
+                              checkpoint_dir=d, resume=True)
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(got.centers))
+    np.testing.assert_array_equal(np.asarray(ref.weights),
+                                  np.asarray(got.weights))
+
+
+def test_preemption_drains_checkpoints_and_resumes_bit_exact(tmp_path):
+    """A stop request mid-stream raises Preempted AFTER persisting the
+    cursor; resuming completes the run bit-exact."""
+    d = str(tmp_path)
+    ref, _ = select_streaming(_src(), _EPS, block=128)
+
+    guard = PreemptionGuard(signals=())
+    base = _src()
+
+    class StopsAfter3:
+        d = base.d
+
+        def chunks(self, start=0):
+            for k, item in enumerate(base.chunks(start=start)):
+                if k == 3:
+                    guard.request_stop()
+                yield item
+
+    with pytest.raises(Preempted) as ei:
+        select_streaming(StopsAfter3(), _EPS, block=128,
+                         checkpoint_dir=d, checkpoint_every=1, guard=guard)
+    assert ei.value.step is not None and 1 <= ei.value.step < 6
+
+    got, _ = select_streaming(_src(), _EPS, block=128,
+                              checkpoint_dir=d, resume=True)
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(got.centers))
+    np.testing.assert_array_equal(np.asarray(ref.weights),
+                                  np.asarray(got.weights))
+
+
+_CRASH_CHILD = """
+import time
+from repro.data.kpca_datasets import ChunkedDataset
+from repro.core.ingest_pipeline import select_streaming
+
+base = ChunkedDataset("pendigits", n=1536, chunk=256, seed=3)
+
+class Slow:  # ~0.15s/chunk: the parent has time to SIGKILL mid-stream
+    d = base.d
+    def chunks(self, start=0):
+        for item in base.chunks(start=start):
+            time.sleep(0.15)
+            yield item
+
+select_streaming(Slow(), 0.25, block=128,
+                 checkpoint_dir=@DIR@, checkpoint_every=1)
+print("FINISHED")  # the parent asserts we never get here
+"""
+
+
+def test_sigkill_mid_ingest_resumes_bit_exact(tmp_path):
+    """The tentpole crash test: SIGKILL (no cleanup, no atexit) an ingest
+    mid-stream; a fresh process resumes from the atomic checkpoints and
+    produces the bit-exact centers and f64 masses of an uninterrupted run."""
+    from repro.checkpoint.store import available_steps
+    d = str(tmp_path)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    child = subprocess.Popen(
+        [sys.executable, "-c", _CRASH_CHILD.replace("@DIR@", repr(d))],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+    try:
+        deadline = time.monotonic() + 120
+        while len(available_steps(d)) < 2:
+            assert child.poll() is None, \
+                f"child exited early: {child.communicate()[1][-2000:]}"
+            assert time.monotonic() < deadline, "no checkpoint in 120s"
+            time.sleep(0.05)
+        child.send_signal(signal.SIGKILL)
+        child.wait(timeout=30)
+    finally:
+        if child.poll() is None:
+            child.kill()
+    assert child.returncode == -signal.SIGKILL
+    steps = available_steps(d)
+    assert steps and steps[-1] < 6  # it really died mid-stream
+
+    ref, _ = select_streaming(_src(), _EPS, block=128)
+    got, stats = select_streaming(_src(), _EPS, block=128,
+                                  checkpoint_dir=d, resume=True)
+    assert stats.rows == 1536
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(got.centers))
+    np.testing.assert_array_equal(np.asarray(ref.weights),
+                                  np.asarray(got.weights))
+
+
+# -------------------------------------------------- degraded serving ------
+
+def _server(m=24, d=4, rank=3):
+    from repro import streaming
+    from repro.core import gaussian
+    from repro.core.rsde import RSDE
+
+    rng = np.random.default_rng(7)
+    c = rng.normal(size=(m, d)).astype(np.float32)
+    rsde = RSDE(c, np.ones(m, np.float64), n=float(m), scheme="test")
+    st = streaming.from_rsde(rsde, gaussian(1.0), rank, eps=0.5, cap=m)
+    return streaming.HotSwapServer(st), st
+
+
+def test_failed_publish_degrades_to_last_good_snapshot():
+    srv, st = _server()
+    v0 = srv.version
+    x = np.zeros((4, 4), np.float32)
+    want = np.asarray(srv.transform(x))
+
+    with chaos.active(FaultPlan({"swap.publish": FaultSpec(kind="error",
+                                                           every=1)})):
+        assert srv.try_publish(st) is False
+    assert srv.version == v0 and srv.degraded
+    info = srv.degraded_info()
+    assert info.degraded and info.failed_publishes == 1
+    assert np.isfinite(info.staleness_bound)
+    np.testing.assert_array_equal(np.asarray(srv.transform(x)), want)
+
+    assert srv.try_publish(st) is True  # fault cleared: recovers
+    assert not srv.degraded and srv.version == v0 + 1
+    assert srv.degraded_info().staleness_bound == 0.0
+
+
+def test_first_publish_failure_cannot_degrade():
+    """With no last-good snapshot there is nothing to fall back to: the
+    failure propagates instead of leaving a server that can't serve."""
+    from repro.streaming import HotSwapServer
+    _, st = _server()
+    srv = HotSwapServer()  # nothing published yet
+    with chaos.active(FaultPlan({"swap.publish": FaultSpec(kind="error",
+                                                           every=1)})):
+        with pytest.raises(InjectedFault):
+            srv.try_publish(st)
+
+
+def test_staleness_bound_matches_single_update_identity():
+    """The whole-vector bound must agree with the closed-form single-update
+    bound on a one-center mass change, and grow with drift."""
+    import jax.numpy as jnp
+    from repro.core.mmd import staleness_bound, weight_update_bound
+
+    w = np.full(16, 4.0)
+    w2 = w.copy()
+    w2[3] += 1.0  # absorb one sample into center 3
+    got = staleness_bound(w, w2)
+    want = float(weight_update_bound(jnp.asarray(64.0), jnp.asarray(65.0),
+                                     jnp.asarray(4.0), jnp.asarray(5.0)))
+    assert got == pytest.approx(want, rel=1e-5)
+    assert staleness_bound(w, w) == 0.0
+    w3 = w.copy()
+    w3[3] += 40.0
+    assert staleness_bound(w, w3) > got  # more drift, bigger budget
+    # capacity growth: a fresh center in a new slot prices like an insert
+    assert staleness_bound(w, np.concatenate([w, [1.0]])) > 0.0

@@ -93,3 +93,87 @@ print("OK")
         r = subprocess.run([sys.executable, "-c", code], env=env,
                            capture_output=True, text=True)
         assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_available_steps_skips_tmp_and_orders(tmp_path):
+    from repro.checkpoint.store import available_steps
+    d = str(tmp_path)
+    assert available_steps(d) == []
+    save_checkpoint(d, 4, _tree())
+    save_checkpoint(d, 2, _tree())
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert available_steps(d) == [2, 4]
+
+
+def test_crc_catches_corruption_and_fallback_restores(tmp_path):
+    import pytest
+    from repro.checkpoint.store import CheckpointCorrupt, available_steps
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    save_checkpoint(d, 2, _tree())
+    shard = os.path.join(d, "step_00000002", "shard_0.npz")
+    raw = bytearray(open(shard, "rb").read())
+    raw[len(raw) // 3] ^= 0x40
+    open(shard, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointCorrupt):
+        restore_checkpoint(d, jax.eval_shape(lambda: _tree()))
+    # the resumer contract: walk available_steps newest-first past the rot
+    steps = [s for s in available_steps(d)]
+    restored, step = restore_checkpoint(d, jax.eval_shape(lambda: _tree()),
+                                        step=steps[-2])
+    assert step == 1
+
+
+def test_chaos_corrupt_site_is_caught_on_restore(tmp_path):
+    import pytest
+    from repro.checkpoint.store import CheckpointCorrupt
+    from repro.runtime import chaos
+    from repro.runtime.chaos import FaultPlan, FaultSpec
+    d = str(tmp_path)
+    with chaos.active(FaultPlan({"checkpoint.shard":
+                                 FaultSpec(kind="corrupt", every=1)})):
+        save_checkpoint(d, 3, _tree())
+    with pytest.raises(CheckpointCorrupt):
+        restore_checkpoint(d, jax.eval_shape(lambda: _tree()))
+
+
+def test_numpy_template_restores_numpy_with_f64_intact(tmp_path):
+    """The ingest-state contract: a float64 leaf saved and restored against
+    a NUMPY template keeps float64 (jnp.asarray would silently round to f32
+    with x64 off)."""
+    d = str(tmp_path)
+    tree = {"w": np.array([1.0, 2.0 + 2**-40], np.float64),
+            "c": np.arange(6, dtype=np.float32).reshape(3, 2)}
+    save_checkpoint(d, 1, tree)
+    restored, _ = restore_checkpoint(
+        d, {"w": np.zeros((0,), np.float64), "c": np.zeros((0, 2),
+                                                           np.float32)})
+    assert isinstance(restored["w"], np.ndarray)
+    assert restored["w"].dtype == np.float64
+    np.testing.assert_array_equal(restored["w"], tree["w"])  # bit-exact
+
+
+def test_save_racing_interpreter_exit_publishes_atomically(tmp_path):
+    """Satellite (b): an async save STILL in flight when the interpreter
+    exits must complete its atomic publish (the atexit hook joins it before
+    daemon threads are reaped) — never a step_<N>.tmp as the final state."""
+    d = str(tmp_path)
+    script = f"""
+import numpy as np
+from repro.checkpoint import AsyncCheckpointer
+ck = AsyncCheckpointer({str(d)!r})
+ck.save(5, {{"w": np.arange(4096.0)}})
+# exit IMMEDIATELY: no wait(), the save races interpreter teardown
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert latest_step(d) == 5
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    restored, _ = restore_checkpoint(d, {"w": np.zeros((0,))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(4096.0))

@@ -34,3 +34,41 @@ def test_elastic_plan_scale_policy():
     plan = ElasticPlan(old_devices=16, new_devices=8,
                        batch_policy="scale_with_devices")
     assert plan.microbatch_factor(4) == 4  # accum unchanged; batch shrinks
+
+
+def test_preemption_guard_uninstall_restores_handlers():
+    """Satellite fix for the handler leak: a guard restores EXACTLY the
+    handlers it displaced, and nested guards restore LIFO."""
+    import signal
+
+    prev = signal.getsignal(signal.SIGTERM)
+    with PreemptionGuard() as outer:
+        h_outer = signal.getsignal(signal.SIGTERM)
+        assert h_outer == outer._handler
+        with PreemptionGuard() as inner:
+            assert signal.getsignal(signal.SIGTERM) == inner._handler
+        # inner gone: the OUTER guard's handler is back, not the original
+        assert signal.getsignal(signal.SIGTERM) == h_outer
+    assert signal.getsignal(signal.SIGTERM) == prev
+
+
+def test_preemption_guard_uninstall_is_idempotent_and_keeps_flag():
+    import signal
+
+    prev = signal.getsignal(signal.SIGTERM)
+    g = PreemptionGuard()
+    g.request_stop()
+    g.uninstall()
+    g.uninstall()  # idempotent
+    assert signal.getsignal(signal.SIGTERM) == prev
+    assert g.should_stop  # uninstalling never un-rings the bell
+
+
+def test_retry_policy_backoff_is_deterministic_and_bounded():
+    from repro.runtime import RetryPolicy
+
+    p = RetryPolicy(base_s=0.01, factor=2.0, max_s=0.05, jitter=0.5, seed=3)
+    seq = [p.backoff_s(k, key="feed7") for k in range(8)]
+    assert seq == [p.backoff_s(k, key="feed7") for k in range(8)]  # replay
+    assert all(0.01 <= s <= 0.05 * 1.5 for s in seq)
+    assert p.backoff_s(0, key="a") != p.backoff_s(0, key="b")  # de-synced

@@ -212,3 +212,169 @@ def test_front_end_over_hot_swap_server_recompile_free():
         np.testing.assert_allclose(f.result(timeout=0),
                                    np.asarray(srv.transform(r)),
                                    rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------- failure paths (§17) ------
+
+def test_dispatch_exception_during_hot_swap_resolves_every_future():
+    """The server blows up exactly while a publish swaps under it: every
+    future in the in-flight batch still resolves (with the error), and the
+    NEXT batch serves normally off the new operator."""
+
+    class SwapBoom(StubServer):
+        def __init__(self):
+            super().__init__(tag=1.0)
+            self.boom = False
+
+        def transform(self, x):
+            if self.boom:
+                self.boom = False
+                self.tag = 2.0  # the "publish" lands mid-dispatch
+                raise RuntimeError("snapshot store raced")
+            return super().transform(x)
+
+    srv = SwapBoom()
+    fe = BatchingFrontEnd(srv, autostart=False)
+    srv.boom = True
+    doomed = [fe.submit(np.ones((2, 2), np.float32)) for _ in range(3)]
+    fe.step()
+    for f in doomed:
+        with pytest.raises(RuntimeError, match="raced"):
+            f.result(timeout=0)
+    after = fe.submit(np.ones((2, 2), np.float32))
+    fe.step()
+    assert set(after.result(timeout=0)[:, 1]) == {2.0}  # new operator
+
+
+def test_deadline_expiry_while_queued_still_serves():
+    """A request whose SLO expired before dispatch is SERVED, not dropped —
+    deadlines bound retry budgets, they are not admission control (the
+    zero-non-shed-drops contract)."""
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, autostart=False, slo_ms=1.0)
+    f = fe.submit(np.ones((2, 2), np.float32))
+    time.sleep(0.02)  # well past the 1ms deadline
+    assert fe.step() == 2
+    np.testing.assert_allclose(f.result(timeout=0),
+                               _expect(srv, np.ones((2, 2))))
+
+
+def test_expired_deadline_bounds_retries_not_results():
+    """With the deadline already gone, a transient dispatch fault is NOT
+    retried (no backoff can land inside the deadline) — the fault reaches
+    the futures instead of hanging the dispatcher in a retry loop."""
+    from repro.runtime import chaos
+    from repro.runtime.chaos import FaultPlan, FaultSpec, TransientFault
+    from repro.runtime.fault import RetryPolicy
+
+    fe = BatchingFrontEnd(StubServer(), autostart=False, slo_ms=1.0,
+                          retry=RetryPolicy(base_s=0.05))
+    f = fe.submit(np.ones((2, 2), np.float32))
+    time.sleep(0.02)
+    with chaos.active(FaultPlan({"serve.dispatch":
+                                 FaultSpec(kind="transient", every=1)})):
+        fe.step()
+    with pytest.raises(TransientFault):
+        f.result(timeout=0)
+
+
+def test_transient_dispatch_fault_is_retried_in_place():
+    from repro.runtime import chaos
+    from repro.runtime.chaos import FaultPlan, FaultSpec
+    from repro.runtime.fault import RetryPolicy
+
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, autostart=False, slo_ms=5000.0,
+                          retry=RetryPolicy(base_s=1e-4))
+    x = np.ones((3, 2), np.float32)
+    f = fe.submit(x)
+    with chaos.active(FaultPlan({"serve.dispatch":
+                                 FaultSpec(kind="transient", at=(1,))})):
+        fe.step()
+    np.testing.assert_allclose(f.result(timeout=0), _expect(srv, x))
+    assert fe.stats.retries == 1
+    assert len(srv.calls) == 1  # the fault fired BEFORE the transform ran
+
+
+def test_max_queue_sheds_with_explicit_exception():
+    from repro.serving import RequestShed
+
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, autostart=False, max_queue=2)
+    futs = [fe.submit(np.ones((1, 2), np.float32)) for _ in range(5)]
+    assert fe.stats.shed == 3
+    fe.drain()
+    outcomes = []
+    for f in futs:
+        try:
+            f.result(timeout=0)
+            outcomes.append("served")
+        except RequestShed:
+            outcomes.append("shed")
+    # FIFO: the first max_queue requests serve, the overflow sheds, and
+    # nothing is silently dropped
+    assert outcomes == ["served", "served", "shed", "shed", "shed"]
+
+
+def test_close_with_in_flight_futures_resolves_all():
+    """close() racing a slow in-flight batch plus queued work: every
+    future resolves (the in-flight batch finishes, the queue drains)."""
+
+    class Slow(StubServer):
+        def transform(self, x):
+            time.sleep(0.05)
+            return super().transform(x)
+
+    srv = Slow()
+    fe = BatchingFrontEnd(srv, max_batch=4, slo_ms=5000.0, min_wait_ms=0.0)
+    futs = [fe.submit(np.full((2, 2), i, np.float32)) for i in range(6)]
+    fe.close()
+    for i, f in enumerate(futs):
+        np.testing.assert_allclose(
+            f.result(timeout=5), _expect(srv, np.full((2, 2), i)))
+
+
+def test_preemption_guard_closes_admission_and_drains():
+    from repro.runtime.fault import PreemptionGuard
+
+    guard = PreemptionGuard(signals=())
+    srv = StubServer()
+    fe = BatchingFrontEnd(srv, slo_ms=5000.0, guard=guard)
+    futs = [fe.submit(np.ones((2, 2), np.float32)) for _ in range(3)]
+    guard.request_stop()
+    for f in futs:  # everything admitted before the stop still serves
+        np.testing.assert_allclose(f.result(timeout=5),
+                                   _expect(srv, np.ones((2, 2))))
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline and not fe._closed:
+        time.sleep(0.01)
+    with pytest.raises(RuntimeError):  # admission is closed after drain
+        fe.submit(np.ones((1, 2), np.float32))
+    fe.close()
+
+
+def test_degraded_batches_are_tagged_with_staleness_info():
+    from repro.serving import ServedRows
+    from repro.streaming.swap import SnapshotInfo
+
+    class Degraded(StubServer):
+        degraded = True
+
+        def degraded_info(self):
+            return SnapshotInfo(version=5, published_at=None, degraded=True,
+                                failed_publishes=2, staleness_bound=0.03)
+
+    srv = Degraded()
+    fe = BatchingFrontEnd(srv, autostart=False)
+    f = fe.submit(np.ones((2, 2), np.float32))
+    fe.step()
+    z = f.result(timeout=0)
+    assert isinstance(z, ServedRows) and z.info.staleness_bound == 0.03
+    np.testing.assert_allclose(np.asarray(z), _expect(srv, np.ones((2, 2))))
+    assert fe.stats.degraded_batches == 1
+    # a healthy server's responses carry no tag (plain ndarray path)
+    srv2 = StubServer()
+    fe2 = BatchingFrontEnd(srv2, autostart=False)
+    f2 = fe2.submit(np.ones((2, 2), np.float32))
+    fe2.step()
+    assert getattr(f2.result(timeout=0), "info", None) is None
